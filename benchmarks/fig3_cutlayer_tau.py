@@ -1,0 +1,63 @@
+"""Paper Fig. 3 / Table 4: interaction between cut layer L_c and server
+iterations τ — communication rounds to reach a target loss.
+
+Paper findings to reproduce: (i) for fixed cut, increasing τ first helps
+then hurts; (ii) earlier cuts (deeper server) help; (iii) the optimal τ
+grows as the cut moves earlier (Cor. 4.2's d_c = √(d/τ) coupling).
+
+    PYTHONPATH=src python -m benchmarks.fig3_cutlayer_tau [--rounds 40]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import make_setup, rounds_to_target, run_mu_splitfed
+from repro.core import theory
+
+
+def run(rounds=40, cuts=(1, 2, 3), taus=(1, 2, 4), target=None, M=4, seed=0):
+    cfg, params, ds, parts, key = make_setup(M=M, seed=seed, layers=3)
+    # target: 80% of the progress the τ=1, cut=2 baseline makes in `rounds`
+    # (a bar the baseline only clears near its end, so the grid spreads)
+    base = run_mu_splitfed(cfg, params, ds, parts, key, M=M, tau=1, cut=2,
+                           rounds=rounds, seed=seed)
+    final = sum(base[-3:]) / 3
+    tgt = target or (base[0] - 0.8 * (base[0] - final))
+    grid = {}
+    for cut in cuts:
+        for tau in taus:
+            losses = run_mu_splitfed(cfg, params, ds, parts, key, M=M,
+                                     tau=tau, cut=cut, rounds=rounds,
+                                     seed=seed)
+            grid[f"cut{cut}_tau{tau}"] = {
+                "rounds_to_target": rounds_to_target(losses, tgt),
+                "final_loss": sum(losses[-3:]) / 3}
+    return {"target_loss": tgt, "grid": grid,
+            "theory_tau_star": {c: theory.optimal_tau_for_cut(
+                *_dims(cfg, c)) for c in cuts}}
+
+
+def _dims(cfg, cut):
+    from repro.models import split_dims
+    d_c, d_s = split_dims(cfg, cut)
+    return d_c + d_s, d_c
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--out", default="bench_fig3.json")
+    args = ap.parse_args(argv)
+    res = run(rounds=args.rounds)
+    print(f"target loss: {res['target_loss']:.4f}")
+    print(f"{'cell':>14s} {'rounds_to_tgt':>13s} {'final_loss':>11s}")
+    for k, v in res["grid"].items():
+        print(f"{k:>14s} {v['rounds_to_target']:13d} {v['final_loss']:11.4f}")
+    print("theory tau* per cut:", res["theory_tau_star"])
+    json.dump(res, open(args.out, "w"))
+    return res
+
+
+if __name__ == "__main__":
+    main()

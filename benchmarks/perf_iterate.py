@@ -1,0 +1,88 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Perf-iteration driver (§Perf): lower+compile ONE cell under a named
+optimization variant and print its roofline terms — the measure step of the
+hypothesis → change → measure → validate loop.
+
+Variants (cumulative ladder):
+  v0  paper-faithful baseline      (recorded in dryrun_*.json, pre-ladder)
+  v1  + f32-accum CE dot + banded SWA (exact-math rewrites, always on now)
+  v2  + counter-based ZO noise     (murmur3+Box-Muller; = TPU kernel stream)
+  v3  + seed-replay aggregation    (O(Mτ) scalars across the slow axis)
+
+    PYTHONPATH=src python -m benchmarks.perf_iterate \
+        --arch qwen3-14b --shape train_4k --variant v3 [--multi-pod]
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.configs import SHAPES_BY_NAME
+from repro.launch.hlo_analysis import analyze_compiled
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, default_sfl, lower_cell
+from repro.configs import get_config
+
+PEAK_FLOPS, HBM_BW, LINK_BW = 197e12, 819e9, 50e9
+
+
+def run_variant(arch: str, shape_name: str, variant: str,
+                multi_pod: bool = False, tau: int = 2) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = SHAPES_BY_NAME[shape_name]
+    cfg = get_config(arch)
+    sfl = default_sfl(cfg, tau=tau)
+    aggregation = "dense"
+    if variant >= "v2" and shape.kind == "train":
+        sfl = dataclasses.replace(sfl, perturbation_dist="counter")
+    if variant >= "v3" and shape.kind == "train":
+        aggregation = "seed_replay"
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, sfl=sfl if shape.kind == "train"
+                      else None, aggregation=aggregation, tau=tau)
+    compiled = lower_cell(cell).compile()
+    a = analyze_compiled(compiled)
+    t_c = a["expanded_dot_flops"] / PEAK_FLOPS
+    t_m = a["expanded_hbm_bytes"] / 2.0 / HBM_BW
+    t_x = a["total_bytes"] / LINK_BW
+    mem = compiled.memory_analysis()
+    return {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": max((("compute", t_c), ("memory", t_m),
+                         ("collective", t_x)), key=lambda kv: kv[1])[0],
+        "flops_per_chip": a["expanded_dot_flops"],
+        "hbm_bytes_per_chip": a["expanded_hbm_bytes"] / 2.0,
+        "coll_bytes_per_chip": a["total_bytes"],
+        "coll_by_kind": a["bytes_by_kind"],
+        "temp_bytes_per_dev": mem.temp_size_in_bytes,
+        "compile_s": round(time.time() - t0, 1),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--variant", default="v1")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tau", type=int, default=2)
+    ap.add_argument("--out", default="perf_iterations.json")
+    args = ap.parse_args(argv)
+    r = run_variant(args.arch, args.shape, args.variant, args.multi_pod,
+                    args.tau)
+    print(json.dumps({k: v for k, v in r.items() if k != "coll_by_kind"},
+                     indent=1))
+    print("coll_by_kind:", {k: f"{v/2**30:.1f}GiB"
+                            for k, v in r["coll_by_kind"].items()})
+    rows = []
+    if os.path.exists(args.out):
+        rows = json.load(open(args.out))
+    rows.append(r)
+    json.dump(rows, open(args.out, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

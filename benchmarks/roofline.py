@@ -1,0 +1,185 @@
+"""Roofline analysis (§Roofline of EXPERIMENTS.md).
+
+Reads the dry-run JSONs (per-device expanded FLOPs / HBM bytes / collective
+bytes from the compiled SPMD module) and derives the three roofline terms
+per (arch × shape × mesh):
+
+    compute    = flops_per_chip / PEAK_FLOPS           [s]
+    memory     = hbm_bytes_per_chip / HBM_BW           [s]
+    collective = collective_bytes_per_chip / LINK_BW   [s]
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+MODEL_FLOPS (the "useful work" yardstick):
+  * train cells: the prescribed 6·N·D with N = trainable params (N_active
+    for MoE) and D = tokens per step — the first-order-training convention.
+    ZO training does 2·N·D per forward and (2τP+2) server + 3 client
+    forwards per round, so we ALSO report zo_model_flops (the
+    algorithm-native count); ratio_hlo uses zo_model_flops (catches real
+    redundancy rather than the ZO-vs-FO protocol difference).
+  * serve cells: 2·N_active·D.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline \
+        --inputs dryrun_single.json dryrun_multi.json --md
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link (ICI)
+
+TAU = 2                      # dry-run default
+P_PERT = 1
+M_CLIENTS = 16
+
+
+def _cfg(arch):
+    from repro.configs import get_config
+    return get_config(arch)
+
+
+def active_params(arch: str) -> Dict[str, float]:
+    """(total, active) param counts; active = shared + top_k experts only."""
+    import jax
+    from repro.models import init_params, split_dims
+    cfg = _cfg(arch)
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    size = lambda t: sum(int(_np_prod(x.shape)) for x in jax.tree.leaves(t))
+    total = size(shapes)
+    active = total
+    if cfg.moe is not None:
+        E = cfg.moe.n_experts
+        k = cfg.moe.top_k
+        expert_leaves = 0
+        units = shapes["units"]
+        for bkey, blk in units.items():
+            ffn = blk.get("ffn", {})
+            for nm in ("wi", "wg", "wo"):
+                if nm in ffn and len(ffn[nm].shape) == 4:  # (u, E, D, F)
+                    expert_leaves += int(_np_prod(ffn[nm].shape))
+        active = total - expert_leaves + expert_leaves * k / E
+    d_c, d_s = split_dims(cfg, cfg.default_cut_units)
+    return {"total": total, "active": active, "d_c": d_c, "d_s": d_s}
+
+
+def _np_prod(shape):
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def model_flops(arch: str, shape_name: str, rec: dict) -> Dict[str, float]:
+    from repro.configs import SHAPES_BY_NAME
+    sh = SHAPES_BY_NAME[shape_name]
+    ap = active_params(arch)
+    cfg = _cfg(arch)
+    frac_active = ap["active"] / ap["total"]
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        fo = 6.0 * ap["active"] * tokens
+        tok_per_client = tokens / M_CLIENTS
+        fwd = 2.0 * frac_active
+        zo = M_CLIENTS * tok_per_client * (
+            3 * fwd * ap["d_c"] + (2 * TAU * P_PERT + 2) * fwd * ap["d_s"])
+        return {"fo_6nd": fo, "zo_native": zo}
+    if sh.kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+    else:
+        tokens = sh.global_batch * 1
+    f = 2.0 * ap["active"] * tokens
+    return {"fo_6nd": f, "zo_native": f}
+
+
+def analyze(records: List[dict], n_chips_by_mesh=None) -> List[dict]:
+    n_chips_by_mesh = n_chips_by_mesh or {"16x16": 256, "2x16x16": 512}
+    rows = []
+    for r in records:
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r.get("mesh", "?"),
+                         "status": r.get("status")})
+            continue
+        n_chips = n_chips_by_mesh.get(r["mesh"], 256)
+        coll = r["collectives"]
+        flops_chip = coll["expanded_dot_flops"]     # per-device SPMD module
+        # operand+result accounting counts each producer->consumer edge at
+        # both endpoints; halve to approximate actual read+write traffic.
+        hbm_chip = coll["expanded_hbm_bytes"] / 2.0
+        coll_chip = coll["total_bytes"]
+        t_c = flops_chip / PEAK_FLOPS
+        t_m = hbm_chip / HBM_BW
+        t_x = coll_chip / LINK_BW
+        dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+                  key=lambda kv: kv[1])[0]
+        mf = model_flops(r["arch"], r["shape"], r)
+        useful = mf["zo_native"] if r["shape"] == "train_4k" else mf["fo_6nd"]
+        ratio = useful / (flops_chip * n_chips) if flops_chip else 0.0
+        bound = max(t_c, t_m, t_x)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok", "plan": r.get("plan", {}),
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "dominant": dom,
+            "roofline_fraction": (t_c / bound) if bound else 0.0,
+            "model_flops_6nd": mf["fo_6nd"],
+            "model_flops_zo": mf["zo_native"],
+            "hlo_flops_global": flops_chip * n_chips,
+            "useful_ratio": ratio,
+            "per_chip_hbm_gib": hbm_chip / 2**30,
+            "per_chip_coll_gib": coll_chip / 2**30,
+        })
+    return rows
+
+
+def to_markdown(rows: List[dict]) -> str:
+    out = ["| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful/HLO | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                       f"| — | {r.get('status')} | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3g} | {r['t_memory_s']:.3g} "
+            f"| {r['t_collective_s']:.3g} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--inputs", nargs="+",
+                    default=["dryrun_single.json", "dryrun_multi.json"])
+    ap.add_argument("--out", default="roofline.json")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args(argv)
+    records = []
+    for f in args.inputs:
+        try:
+            records.extend(json.load(open(f)))
+        except FileNotFoundError:
+            print(f"[roofline] missing {f} (run the dry-run first)")
+    rows = analyze(records)
+    json.dump(rows, open(args.out, "w"), indent=1)
+    if args.md:
+        print(to_markdown(rows))
+    else:
+        for r in rows:
+            if r.get("status") == "ok":
+                print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+                      f"C={r['t_compute_s']:.3g}s M={r['t_memory_s']:.3g}s "
+                      f"X={r['t_collective_s']:.3g}s -> {r['dominant']}")
+    print(f"[roofline] {sum(1 for r in rows if r.get('status')=='ok')} rows "
+          f"-> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

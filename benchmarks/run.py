@@ -1,0 +1,116 @@
+"""Benchmark aggregator: one entry per paper table/figure + kernel
+microbenchmarks. Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _timed(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def kernel_microbench(rows):
+    from repro.kernels.ops import rmsnorm_op, zo_update_leaf
+    from repro.kernels import ref
+    x = jax.random.normal(jax.random.PRNGKey(0), (512, 1024), jnp.float32)
+    s = jnp.ones((1024,), jnp.float32)
+    us = _timed(jax.jit(lambda a: ref.rmsnorm_ref(a, s)), x)
+    rows.append(("kernel.rmsnorm.ref_jnp", us, "oracle path"))
+    us = _timed(jax.jit(lambda a: rmsnorm_op(a, s, interpret=True)), x)
+    rows.append(("kernel.rmsnorm.pallas_interpret", us,
+                 "correctness path (CPU interpret; perf target is TPU)"))
+    us = _timed(jax.jit(lambda a: ref.zo_update_ref(a, 3, 0.1)), x)
+    rows.append(("kernel.zo_update.ref_jnp", us, "oracle path"))
+
+
+def round_bench(rows, rounds=3):
+    from benchmarks.common import make_setup, run_mu_splitfed
+    cfg, params, ds, parts, key = make_setup(M=2, batch=1, seq=32)
+    t0 = time.perf_counter()
+    losses = run_mu_splitfed(cfg, params, ds, parts, key, M=2, tau=2, cut=1,
+                             rounds=rounds)
+    us = (time.perf_counter() - t0) / rounds * 1e6
+    rows.append(("mu_splitfed.round.tiny", us,
+                 f"loss {losses[0]:.3f}->{losses[-1]:.3f}"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="microbench + short paper tables only")
+    ap.add_argument("--rounds", type=int, default=0,
+                    help="override rounds for the training benchmarks")
+    args = ap.parse_args(argv)
+    rows = []
+
+    kernel_microbench(rows)
+    round_bench(rows)
+
+    r = args.rounds or (12 if args.quick else 30)
+
+    from benchmarks import (fig2_straggler, fig3_cutlayer_tau, fig4_memory,
+                            table1_tau_accuracy, table2_comm_complexity)
+    t0 = time.perf_counter()
+    t1 = table1_tau_accuracy.run(rounds=r)
+    rows.append(("paper.table1.tau_sweep", (time.perf_counter() - t0) * 1e6,
+                 " ".join(f"tau{k}={v['final_loss']:.3f}"
+                          for k, v in t1.items())))
+
+    t0 = time.perf_counter()
+    f2 = fig2_straggler.run(rounds=r)
+    best = min(f2, key=lambda a: f2[a]["loss"][-1])
+    rows.append(("paper.fig2.straggler", (time.perf_counter() - t0) * 1e6,
+                 " ".join(f"{a}:t={c['wall'][-1]:.0f},l={c['loss'][-1]:.3f}"
+                          for a, c in f2.items())
+                 + f" best_loss={best}"))
+
+    e12 = fig2_straggler.verify_eq12()
+    spread = max(x["t_mu_over_T0_tserver"] for x in e12) / max(
+        min(x["t_mu_over_T0_tserver"] for x in e12), 1e-9)
+    rows.append(("paper.eq12.straggler_independence", 0.0,
+                 f"total_time/(T0*t_server) spread x{spread:.2f} across "
+                 f"8x delay range (1.0 = perfectly independent)"))
+
+    t0 = time.perf_counter()
+    f3 = fig3_cutlayer_tau.run(rounds=max(r, 20))
+    rows.append(("paper.fig3.cut_x_tau", (time.perf_counter() - t0) * 1e6,
+                 "final_loss " + " ".join(f"{k}={v['final_loss']:.4f}"
+                                          for k, v in f3["grid"].items())))
+
+    t0 = time.perf_counter()
+    a = fig4_memory.analytic()
+    m = fig4_memory.measured_smoke()
+    rows.append(("paper.fig4.client_memory", (time.perf_counter() - t0) * 1e6,
+                 f"fedavg={a['fedavg_gib']:.2f}GiB "
+                 f"fedlora={a['fedlora_gib']:.2f}GiB "
+                 f"mu={a['mu_splitfed_client_gib']:.2f}GiB "
+                 f"(paper: 8.02/5.64/1.05) measured_ratio=x{m['ratio']:.1f}"))
+
+    th = table2_comm_complexity.theory_table()
+    meas = table2_comm_complexity.measured_protocol()
+    rows.append(("paper.table2.comm_complexity", 0.0,
+                 f"tau_speedup={th['mu_splitfed_tau1']/th['mu_splitfed']:.1f}x"
+                 f" replay_compression={meas['compression_ratio']:.0f}x"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Table 1: effect of τ at a FIXED number of communication rounds.
+
+Paper finding: at the paper's cut (small client prefix), τ=2 is best and
+larger τ degrades — the τ × cut-layer coupling of Cor. 4.2. Here the metric
+is final LM loss after R rounds (lower = better) on the synthetic task.
+
+    PYTHONPATH=src python -m benchmarks.table1_tau_accuracy [--rounds 30]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import make_setup, run_mu_splitfed
+
+
+def run(rounds=30, taus=(1, 2, 3, 4), M=4, seed=0):
+    cfg, params, ds, parts, key = make_setup(M=M, seed=seed)
+    out = {}
+    for tau in taus:
+        losses = run_mu_splitfed(cfg, params, ds, parts, key, M=M, tau=tau,
+                                 cut=1, rounds=rounds, seed=seed)
+        out[tau] = {"final_loss": sum(losses[-3:]) / 3,
+                    "curve": losses}
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--out", default="bench_table1.json")
+    args = ap.parse_args(argv)
+    res = run(rounds=args.rounds)
+    print(f"{'tau':>4s} {'final_loss':>11s}   (vanilla SplitFed = tau 1)")
+    for tau, r in res.items():
+        print(f"{tau:4d} {r['final_loss']:11.4f}")
+    json.dump({str(k): v for k, v in res.items()}, open(args.out, "w"))
+    return res
+
+
+if __name__ == "__main__":
+    main()

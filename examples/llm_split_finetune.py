@@ -1,0 +1,67 @@
+"""The paper's LLM scenario (§5, OPT-1.3B on SST-2): split fine-tuning of a
+transformer LM on a sentiment task with ZO updates and a cut-layer × τ
+choice guided by Cor. 4.2 — here at smoke scale for CPU.
+
+The client holds only the embedding + first units (1.05 GB at the paper's
+scale — see benchmarks/fig4_memory.py); the server fine-tunes the deep
+suffix with τ unbalanced ZO steps per round. The metric is label-token
+accuracy (the SST-2 stand-in verbalizes the label as the final token).
+
+    PYTHONPATH=src python examples/llm_split_finetune.py [--tau 2] [--cut 1]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SFLConfig, get_config
+from repro.core import theory
+from repro.core.splitfed import mu_splitfed_round
+from repro.data.synthetic import SyntheticSentiment
+from repro.models import init_params, logits_fn, untie_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tau", type=int, default=2)
+    ap.add_argument("--cut", type=int, default=1)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--clients", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config("paper-opt-1.3b", smoke=True).replace(dtype="float32")
+    best_cut, _ = theory.plan_cut(cfg, args.tau)
+    print(f"theory cut planner: d_c=sqrt(d/tau) suggests cut={best_cut} "
+          f"for tau={args.tau} (using --cut {args.cut})")
+    sfl = SFLConfig(n_clients=args.clients, tau=args.tau, cut_units=args.cut,
+                    lr_server=5e-3, lr_client=1e-3, lr_global=1.0)
+
+    key = jax.random.PRNGKey(0)
+    params = untie_params(cfg, init_params(cfg, key))
+    ds = SyntheticSentiment(vocab_size=cfg.vocab_size, seq_len=32, seed=0)
+
+    def eval_acc(params, n=32):
+        b = ds.batch(np.arange(10_000, 10_000 + n))
+        logits = logits_fn(cfg, params, {"tokens": jnp.asarray(b["tokens"])})
+        return ds.accuracy(np.asarray(logits[:, -2].astype(jnp.float32)),
+                           b["class"])
+
+    round_fn = jax.jit(lambda p, b, m, k: mu_splitfed_round(
+        cfg, sfl, p, b, m, k))
+    mask = jnp.ones((args.clients,), jnp.float32)
+    print(f"initial label accuracy: {eval_acc(params):.2f}")
+    for r in range(args.rounds):
+        rows = [ds.batch(np.arange(r * 64 + m * 16, r * 64 + m * 16 + 4))
+                for m in range(args.clients)]
+        batch = {k2: jnp.asarray(np.stack([x[k2] for x in rows]))
+                 for k2 in ("tokens", "labels")}
+        params, metrics = round_fn(params, batch, mask,
+                                   jax.random.fold_in(key, r))
+        if (r + 1) % 5 == 0:
+            print(f"round {r+1:3d}  loss {float(metrics.loss.mean()):.4f}  "
+                  f"label acc {eval_acc(params):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Straggler resilience (paper Fig. 2 + Eq. 12 scenario): equal simulated
+wall-clock budget, vanilla SplitFed vs MU-SplitFed with τ planned from
+observed delays (τ* = t_straggler/t_server, capped). The unbalanced server
+updates overlap the straggler wait, so MU-SplitFed packs τ server steps
+into each (equally long) round — more optimization progress per second.
+Learning rates follow Thm 4.1's coupling (η_s = η_c/τ).
+
+    PYTHONPATH=src python examples/straggler_resilience.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SFLConfig, get_config
+from repro.core import straggler as strag
+from repro.core.splitfed import mu_splitfed_round
+from repro.data import SyntheticLM, dirichlet_partition, make_client_batches
+from repro.models import init_params, untie_params
+
+M, T_SERVER, BUDGET = 4, 0.5, 120.0
+cfg = get_config("olmo-1b", smoke=True).replace(dtype="float32")
+key = jax.random.PRNGKey(0)
+params0 = untie_params(cfg, init_params(cfg, key))
+ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, seed=0)
+parts = dirichlet_partition(np.arange(256) % 8, M, alpha=0.5)
+
+rng = np.random.default_rng(0)
+delays_all = strag.DelayModel(base=1.0, scale=3.0).sample(rng, M, 200)
+t_straggler = float(delays_all.max(1).mean())
+tau_star = strag.plan_tau(t_straggler, T_SERVER, tau_max=8)
+print(f"observed straggler time {t_straggler:.2f}s, t_server {T_SERVER}s "
+      f"-> planned tau* = {tau_star} (capped at 8)")
+print(f"equal simulated budget: {BUDGET:.0f}s\n")
+
+for name, tau in (("vanilla(tau=1)", 1), (f"mu-splitfed(tau={tau_star})",
+                                          tau_star)):
+    # Thm 4.1: eta_s = eta_c / tau — server lr shrinks with tau
+    sfl = SFLConfig(n_clients=M, tau=tau, cut_units=1,
+                    lr_server=8e-3 / tau, lr_client=8e-3,
+                    lr_global=1.0)
+    fn = jax.jit(lambda p, b, m, k: mu_splitfed_round(cfg, sfl, p, b, m, k))
+    params, t, r = params0, 0.0, 0
+    mask = jnp.ones((M,), jnp.float32)
+    loss = float("nan")
+    while True:
+        dt = strag.round_time_mu_splitfed(delays_all[r % 200], np.ones(M),
+                                          T_SERVER, tau)
+        if t + dt > BUDGET:
+            break
+        host = make_client_batches(ds, parts, r, 2, seed=0)
+        b = {k2: jnp.asarray(v) for k2, v in host.items()}
+        params, metrics = fn(params, b, mask, jax.random.fold_in(key, r))
+        loss = float(metrics.loss.mean())
+        t += dt
+        r += 1
+    print(f"{name:22s} rounds {r:3d}  server-steps {r*tau:4d}  "
+          f"final loss {loss:.4f}  time used {t:6.1f}s")
+print("\nEq.12: per-round time = max(t_straggler, tau*t_server) — the tau "
+      "server steps ride inside the straggler wait for free; the same "
+      "budget buys tau x more server optimization.")

@@ -1,0 +1,2 @@
+from repro.ckpt.checkpoint import (Checkpointer, latest_step, restore_params,
+                                   save_params)

@@ -1,0 +1,3 @@
+from repro.configs.base import (MeshConfig, ModelConfig, MoEConfig, SFLConfig,
+                                SHAPES, SHAPES_BY_NAME, ShapeConfig, TrainConfig)
+from repro.configs.registry import ASSIGNED, cells, get_config

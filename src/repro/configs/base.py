@@ -1,0 +1,189 @@
+"""Config system for the repro framework.
+
+Everything is a frozen dataclass so configs are hashable (usable as jit
+static args) and serializable. One file per assigned architecture lives in
+this package; each exposes ``CONFIG`` (full-size) and ``SMOKE`` (reduced,
+CPU-runnable) ``ModelConfig`` instances.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block config (GShard-style capacity dispatch)."""
+    n_experts: int
+    top_k: int
+    n_shared: int = 0           # always-on shared experts (DeepSeek-V2)
+    d_expert: int = 0           # expert FFN hidden size (0 -> use model d_ff)
+    capacity_factor: float = 1.25
+    group_size: int = 0         # dispatch group size in tokens (0 -> auto)
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0            # 0 -> ceil(d_model / 16)
+    chunk: int = 64             # chunked selective-scan block length
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    n_heads: int = 4
+    chunk: int = 64             # mLSTM chunkwise-parallel block length
+    proj_factor: float = 2.0    # mLSTM up-projection factor
+    slstm_proj_factor: float = 1.3334
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A single architecture. ``block_pattern`` is the repeating unit of
+    block types; ``n_layers`` must be a multiple of its length. Block types:
+    ``attn`` | ``mamba`` | ``mlstm`` | ``slstm`` | ``xattn`` (cross-attn to
+    image/encoder stream).
+    """
+    name: str
+    family: str                 # dense|moe|hybrid|vlm|audio|ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0             # 0 -> d_model // n_heads
+
+    # --- attention ---
+    attn_impl: str = "gqa"      # gqa|mla
+    qk_norm: bool = False
+    sliding_window: int = 0     # 0 -> full attention
+    rope_theta: float = 10_000.0
+    # MLA (DeepSeek-V2) dims
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_rope_dim: int = 64
+    qk_nope_dim: int = 128
+    v_head_dim: int = 128
+
+    # --- norms / mlp ---
+    norm_type: str = "rmsnorm"  # rmsnorm|layernorm|nonparam_ln
+    mlp_type: str = "swiglu"    # swiglu|gelu
+    moe: Optional[MoEConfig] = None
+    moe_every: int = 1          # layer i uses MoE iff i % moe_every == moe_offset
+    moe_offset: int = 0
+
+    # --- block pattern ---
+    block_pattern: Tuple[str, ...] = ("attn",)
+    mamba: Optional[MambaConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+
+    # --- encoder/decoder (whisper) ---
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    n_audio_frames: int = 0     # precomputed frame embeddings (stub frontend)
+
+    # --- vlm (llama-3.2-vision) ---
+    n_image_tokens: int = 0     # precomputed patch embeddings (stub frontend)
+
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    max_seq_len: int = 131_072
+
+    # --- paper (SFL) defaults for this arch ---
+    default_cut_units: int = 1  # client-side depth in repeating units
+    sub_quadratic: bool = False # eligible for long_500k decode
+
+    def __post_init__(self):
+        if self.d_head == 0:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+        assert self.n_layers % len(self.block_pattern) == 0, (
+            f"{self.name}: n_layers={self.n_layers} not a multiple of "
+            f"pattern len {len(self.block_pattern)}")
+
+    @property
+    def n_units(self) -> int:
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def unit_len(self) -> int:
+        return len(self.block_pattern)
+
+    def layer_uses_moe(self, pos_in_unit: int) -> bool:
+        if self.moe is None:
+            return False
+        # pattern-static: unit_len must be a multiple of moe_every
+        return pos_in_unit % self.moe_every == self.moe_offset
+
+    def replace(self, **kw) -> "ModelConfig":
+        # d_head is derived from d_model/n_heads in __post_init__; reset it
+        # when its sources change unless explicitly overridden.
+        if ("d_model" in kw or "n_heads" in kw) and "d_head" not in kw:
+            kw["d_head"] = 0
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train|prefill|decode
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+@dataclass(frozen=True)
+class SFLConfig:
+    """MU-SplitFed algorithm config (the paper's technique)."""
+    n_clients: int = 16         # M
+    tau: int = 2                # unbalanced server update steps per round
+    n_perturbations: int = 1    # P (SPSA averaging)
+    cut_units: int = 1          # L_c in repeating units
+    lr_server: float = 1e-2     # eta_s
+    lr_client: float = 5e-3     # eta_c
+    lr_global: float = 0.3      # eta_g
+    zo_eps: float = 5e-3        # lambda (smoothing)
+    participation: float = 1.0  # fraction of clients active per round
+    perturbation_dist: str = "gaussian"  # gaussian|sphere (paper: sphere)
+    seed: int = 0
+    # straggler simulation
+    straggler_rate: float = 0.0     # exponential delay scale (0 = off)
+    deadline: float = 0.0           # drop clients beyond deadline (0 = off)
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    lr: float = 1e-3
+    optimizer: str = "adam"     # for first-order baselines
+    warmup: int = 10
+    seed: int = 0

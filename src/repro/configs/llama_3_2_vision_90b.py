@@ -1,0 +1,25 @@
+"""llama-3.2-vision-90b [vlm] — gated cross-attn image layers every 5th
+block; vision frontend is a stub (input_specs provides precomputed patch
+embeddings). [hf:meta-llama/Llama-3.2-11B-Vision; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    block_pattern=("attn", "attn", "attn", "attn", "xattn"),
+    n_image_tokens=1600,
+    max_seq_len=131_072,
+    sub_quadratic=False,
+    default_cut_units=1,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=10, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=256, n_image_tokens=8, max_seq_len=256,
+)

@@ -1,0 +1,45 @@
+"""Architecture registry: ``--arch <id>`` lookup for launchers, the dry-run
+and benchmarks. IDs are the assignment names."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, SHAPES, SHAPES_BY_NAME, ShapeConfig
+
+_MODULES: Dict[str, str] = {
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo_12b",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "llama-3.2-vision-90b": "repro.configs.llama_3_2_vision_90b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    # paper's own setting (not in the assigned pool)
+    "paper-opt-1.3b": "repro.configs.paper_opt_1_3b",
+}
+
+ASSIGNED: List[str] = [k for k in _MODULES if not k.startswith("paper-")]
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[name])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def cells(include_skips: bool = False):
+    """All assigned (arch, shape) cells. long_500k only for sub-quadratic
+    archs; skipped cells yield (arch, shape, 'skip:<reason>') when requested."""
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if shape.name == "long_500k" and not cfg.sub_quadratic:
+                if include_skips:
+                    yield arch, shape, "skip:full-attention is O(S^2) at 500k"
+                continue
+            yield (arch, shape, "run") if include_skips else (arch, shape)

@@ -1,0 +1,28 @@
+"""whisper-tiny [audio] — enc-dec backbone; conv frontend is a stub
+(input_specs provides precomputed frame embeddings). [arXiv:2212.04356;
+unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,                  # decoder blocks
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    norm_type="layernorm",
+    mlp_type="gelu",
+    is_encoder_decoder=True,
+    n_encoder_layers=4,
+    n_audio_frames=1500,
+    max_seq_len=32_768,          # backbone-only decode shape support
+    sub_quadratic=False,
+    default_cut_units=1,         # cut inside the encoder
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2, n_encoder_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab_size=256, n_audio_frames=16, max_seq_len=256,
+)

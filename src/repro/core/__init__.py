@@ -1,0 +1,6 @@
+"""Paper core: MU-SplitFed (unbalanced-update split federated learning with
+zeroth-order optimization), its baselines, the straggler system model, and
+the convergence-theory calculators."""
+from repro.core import baselines, straggler, theory, zo
+from repro.core.splitfed import (RoundMetrics, mu_split_round,
+                                 mu_splitfed_round)

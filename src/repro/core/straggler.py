@@ -1,0 +1,133 @@
+"""Straggler system model: device heterogeneity, wall-clock simulation,
+deadline-based participation, and the paper's τ-planner.
+
+The paper (§5) simulates heterogeneity by sampling per-client computation
+time from an exponential distribution; Eq. 12 shows that with
+τ = t_straggler / t_server the total time T₀·t_straggler/τ = T₀·t_server
+becomes independent of the straggler. This module reproduces that system
+model and exposes it to the trainer as *data* (delays, masks) — the jit'd
+round math never blocks on it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayModel:
+    """Per-round client compute times (seconds, simulated).
+
+    t_m = base * (1 + Exp(scale))  — heterogeneous, heavy-tailed (paper §5
+    follows [8,12] and samples from an exponential distribution).
+    ``hetero`` optionally fixes a per-client speed multiplier (systematic
+    stragglers rather than purely stochastic ones).
+    """
+    base: float = 1.0
+    scale: float = 1.0
+    hetero: Optional[Tuple[float, ...]] = None
+
+    def sample(self, rng: np.random.Generator, n_clients: int,
+               n_rounds: int) -> np.ndarray:
+        t = self.base * (1.0 + rng.exponential(self.scale,
+                                               size=(n_rounds, n_clients)))
+        if self.hetero is not None:
+            t = t * np.asarray(self.hetero)[None, :]
+        return t
+
+
+def participation_mask(rng: np.random.Generator, n_clients: int,
+                       fraction: float) -> np.ndarray:
+    """Random partial participation (paper: 50%). Always >=1 active."""
+    k = max(1, int(round(fraction * n_clients)))
+    idx = rng.choice(n_clients, size=k, replace=False)
+    m = np.zeros((n_clients,), np.float32)
+    m[idx] = 1.0
+    return m
+
+
+def deadline_mask(delays: np.ndarray, deadline: float) -> np.ndarray:
+    """Drop clients slower than the deadline (straggler mitigation knob)."""
+    if deadline <= 0:
+        return np.ones_like(delays, np.float32)
+    m = (delays <= deadline).astype(np.float32)
+    if m.sum() == 0:                       # never drop everyone
+        m[np.argmin(delays)] = 1.0
+    return m
+
+
+def plan_tau(t_straggler: float, t_server: float, tau_max: int = 64) -> int:
+    """Paper Eq. 12: τ* = t_straggler / t_server (clipped, >=1)."""
+    return int(np.clip(round(t_straggler / max(t_server, 1e-9)), 1, tau_max))
+
+
+# ---------------------------------------------------------------------------
+# wall-clock round-time models (per algorithm)
+# ---------------------------------------------------------------------------
+
+def round_time_mu_splitfed(client_times: np.ndarray, mask: np.ndarray,
+                           t_server: float, tau: int,
+                           t_comm: float = 0.0) -> float:
+    """Server overlaps its τ local steps with client compute: the round ends
+    when BOTH the slowest active client and the server's τ steps are done."""
+    active = client_times[mask > 0]
+    t_straggler = float(active.max()) if active.size else 0.0
+    return max(t_straggler, tau * t_server) + t_comm
+
+
+def round_time_vanilla(client_times: np.ndarray, mask: np.ndarray,
+                       t_server: float, t_comm: float = 0.0) -> float:
+    """Vanilla SplitFed: strictly serialized client -> server dependency."""
+    active = client_times[mask > 0]
+    t_straggler = float(active.max()) if active.size else 0.0
+    return t_straggler + t_server + t_comm
+
+
+def round_time_gas(client_times: np.ndarray, mask: np.ndarray,
+                   t_server: float, t_gen: float,
+                   t_comm: float = 0.0) -> float:
+    """GAS-like async: proceeds at the median client's pace but pays an
+    activation-generation overhead t_gen each round (paper §5 discussion)."""
+    active = client_times[mask > 0]
+    t_med = float(np.median(active)) if active.size else 0.0
+    return t_med + t_server + t_gen + t_comm
+
+
+class WallClock:
+    """Accumulates simulated time across rounds (one per algorithm run)."""
+
+    def __init__(self) -> None:
+        self.t = 0.0
+        self.per_round = []
+
+    def tick(self, dt: float) -> float:
+        self.t += dt
+        self.per_round.append(dt)
+        return self.t
+
+
+def simulate_total_time(algorithm: str, delays: np.ndarray,
+                        masks: np.ndarray, t_server: float, tau: int,
+                        t_gen: float = 0.0, t_comm: float = 0.0,
+                        rounds_needed: Optional[int] = None) -> float:
+    """Total wall-clock for ``rounds_needed`` rounds (default: all rows).
+
+    For MU-SplitFed the τ-speedup also divides the number of rounds needed
+    to converge (Cor. 4.4: T₁ = T₀/τ) — the caller passes the appropriate
+    rounds_needed per algorithm; this function only sums round times.
+    """
+    n = rounds_needed if rounds_needed is not None else delays.shape[0]
+    total = 0.0
+    for r in range(n):
+        row, m = delays[r % delays.shape[0]], masks[r % masks.shape[0]]
+        if algorithm == "mu_splitfed":
+            total += round_time_mu_splitfed(row, m, t_server, tau, t_comm)
+        elif algorithm == "vanilla":
+            total += round_time_vanilla(row, m, t_server, t_comm)
+        elif algorithm == "gas":
+            total += round_time_gas(row, m, t_server, t_gen, t_comm)
+        else:
+            raise ValueError(algorithm)
+    return total

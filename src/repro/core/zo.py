@@ -1,0 +1,160 @@
+"""Zeroth-order (SPSA) engine with seed-replay.
+
+The paper's estimator (Eq. 3): g(x) = (f(x+λu) − f(x−λu)) / (2λ) · u, with u
+either Gaussian (MeZO-style) or uniform on the sphere √d·S^{d-1} (the
+paper's choice). Perturbations are *never materialized as state*: each is a
+pure function of a PRNG key, so
+
+  * perturb-forward-perturb needs no extra parameter-sized buffer beyond the
+    functional temporary (MeZO's trick, expressed functionally);
+  * an entire ZO update is the scalar pair ``(key, coeff)`` — replaying it
+    regenerates u on the fly. This is the "dimension-free communication" of
+    paper Appendix A, and our compressed-aggregation wire format.
+
+All helpers are pytree-generic: they work on client halves, server halves,
+or full models.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class UpdateRecord(NamedTuple):
+    """One replayable ZO update: x <- x - coeff * u(key).  O(1) bytes."""
+    key: jax.Array     # PRNG key
+    coeff: jax.Array   # scalar f32 (already includes lr * delta / (2 lambda))
+
+
+# ---------------------------------------------------------------------------
+# noise
+# ---------------------------------------------------------------------------
+
+def _leaf_keys(key, params: Params):
+    """One fold_in-derived key per leaf — deterministic in tree structure,
+    independent of sharding/mesh (jax.random is shape-deterministic)."""
+    leaves, treedef = jax.tree.flatten(params)
+    keys = [jax.random.fold_in(key, i) for i in range(len(leaves))]
+    return jax.tree.unflatten(treedef, keys)
+
+
+def tree_noise(key, params: Params, dist: str = "gaussian") -> Params:
+    """u with the same structure/shapes as params (f32 leaves).
+
+    dist='gaussian': iid N(0,1) via threefry (jax.random).
+    dist='counter' : iid N(0,1) via the counter-based murmur3+Box-Muller
+        generator of kernels/ref.py — ~3 HLO ops/element instead of
+        threefry's long chain; the fused Pallas zo_update kernel applies
+        the same hash family on-chip on TPU (beyond-paper optimization;
+        still an exact SPSA gaussian).
+    dist='sphere'  : gaussian scaled to ‖u‖=√d globally (the paper's
+        √d·S^{d-1}); needs a global norm, hence two passes.
+    """
+    if dist == "counter":
+        # Sharding-friendly: the (row, col) counters are built from
+        # leaf-SHAPED iotas (row = flattened leading dims, col = last dim),
+        # so the whole generator is elementwise in the leaf's layout and
+        # GSPMD partitions it exactly like the parameter it perturbs — no
+        # reshapes, no gathers (the v2 lesson in EXPERIMENTS.md §Perf).
+        from repro.kernels.ref import counter_gauss2
+        leaves, treedef = jax.tree.flatten(params)
+        base = (jnp.asarray(key).reshape(-1)[0]
+                ^ jnp.asarray(key).reshape(-1)[-1]).astype(jnp.uint32)
+        out = []
+        for i, leaf in enumerate(leaves):
+            seed = base ^ jnp.uint32((i * 0x9E3779B9) & 0xFFFFFFFF)
+            shape = leaf.shape if leaf.ndim > 0 else (1,)
+            # row = linear index over all-but-last dims; col = last dim
+            row = jnp.zeros(shape, jnp.uint32)
+            mult = 1
+            for d in range(len(shape) - 2, -1, -1):
+                row = row + jax.lax.broadcasted_iota(jnp.uint32, shape, d) \
+                    * jnp.uint32(mult)
+                mult *= shape[d]
+            col = jax.lax.broadcasted_iota(jnp.uint32, shape,
+                                           len(shape) - 1)
+            u = counter_gauss2(seed, row, col)
+            out.append(u.reshape(leaf.shape))
+        return jax.tree.unflatten(treedef, out)
+    ks = _leaf_keys(key, params)
+    u = jax.tree.map(lambda p, k: jax.random.normal(k, p.shape, jnp.float32),
+                     params, ks)
+    if dist == "sphere":
+        sq = sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(u))
+        d = sum(x.size for x in jax.tree.leaves(u))
+        u = jax.tree.map(lambda x: x * (jnp.sqrt(float(d)) / jnp.sqrt(sq)), u)
+    return u
+
+
+def perturb(params: Params, key, scale, dist: str = "gaussian") -> Params:
+    """x + scale * u(key). ``scale`` may be a traced scalar (e.g. ±λ)."""
+    u = tree_noise(key, params, dist)
+    return jax.tree.map(lambda p, n: (p + scale * n).astype(p.dtype), params, u)
+
+
+def apply_update(params: Params, key, coeff, dist: str = "gaussian") -> Params:
+    """x - coeff * u(key): replay one UpdateRecord."""
+    return perturb(params, key, -coeff, dist)
+
+
+def replay_updates(params: Params, keys, coeffs, dist: str = "gaussian") -> Params:
+    """Apply a batch of records sequentially (order-independent: updates are
+    additive once the coeffs are fixed). keys: (N,) key array; coeffs: (N,)."""
+    def body(p, rec):
+        k, c = rec
+        return apply_update(p, k, c, dist), None
+    out, _ = jax.lax.scan(body, params, (keys, coeffs))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SPSA estimation
+# ---------------------------------------------------------------------------
+
+def spsa_delta(loss_of: Callable[[Params], jax.Array], params: Params, key,
+               eps: float, dist: str = "gaussian") -> jax.Array:
+    """δ = f(x+λu) − f(x−λu) for one perturbation. Two forwards."""
+    lp = loss_of(perturb(params, key, +eps, dist))
+    lm = loss_of(perturb(params, key, -eps, dist))
+    return (lp - lm).astype(jnp.float32)
+
+
+def spsa_step(loss_of: Callable[[Params], jax.Array], params: Params, key,
+              eps: float, lr, n_perturbations: int = 1,
+              dist: str = "gaussian") -> Tuple[Params, jax.Array, Tuple]:
+    """One ZO-SGD step with P-perturbation averaging.
+
+    Returns (new_params, mean_delta, records) where records = (keys, coeffs)
+    are the replayable wire format (P entries).
+    """
+    P = n_perturbations
+    pkeys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(P))
+
+    def one(i, carry):
+        deltas = carry
+        d = spsa_delta(loss_of, params, pkeys[i], eps, dist)
+        return deltas.at[i].set(d)
+
+    deltas = jax.lax.fori_loop(0, P, one, jnp.zeros((P,), jnp.float32))
+    coeffs = lr * deltas / (2.0 * eps * P)
+    new_params = replay_updates(params, pkeys, coeffs, dist)
+    return new_params, jnp.mean(deltas), (pkeys, coeffs)
+
+
+def zo_gradient(loss_of: Callable[[Params], jax.Array], params: Params, key,
+                eps: float, n_perturbations: int = 1,
+                dist: str = "gaussian") -> Params:
+    """Materialized ZO gradient estimate (tests / analysis only — training
+    paths use spsa_step's replay form and never build this tree)."""
+    P = n_perturbations
+    g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    for i in range(P):
+        k = jax.random.fold_in(key, i)
+        d = spsa_delta(loss_of, params, k, eps, dist)
+        u = tree_noise(k, params, dist)
+        g = jax.tree.map(lambda a, n: a + (d / (2 * eps * P)) * n, g, u)
+    return g

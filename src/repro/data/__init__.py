@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLM, SyntheticSentiment
+from repro.data.partition import dirichlet_partition
+from repro.data.loader import FederatedLoader, make_client_batches

@@ -1,0 +1,123 @@
+"""Flash-attention forward Pallas TPU kernel (causal / sliding-window, GQA).
+
+ZO training needs NO attention backward — the paper's gradient-free design
+means the flash *forward* alone covers the training hot path (a structural
+simplification vs first-order flash kernels).
+
+Canonical TPU blocking: grid (B·H, S_q/BQ, S_k/BK); the kv dim is the
+innermost (sequential) grid axis, so running max / sum / accumulator live in
+VMEM scratch across kv steps. Per-step working set:
+    q (BQ, d) + k (BK, d) + v (BK, d) + acc (BQ, d) + scores (BQ, BK)
+With BQ=BK=128, d<=256 in f32 that is < 0.6 MiB — comfortably inside the
+~16 MiB VMEM budget, and the (128, 128) score tile is MXU-shaped.
+
+Causal + sliding-window masking is block-sparse: kv blocks wholly outside
+the band are skipped via @pl.when (no MXU work, no HBM traffic for skipped
+v loads in the compiled path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int, bq: int, bk: int,
+                  nk: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_lo = iq * bq                       # first query row of this block
+    k_lo = ik * bk
+    # block-level relevance: any (r, c) with c <= r (causal) and r-c < window
+    relevant = True
+    if causal:
+        relevant = k_lo <= q_lo + bq - 1
+    if window > 0:
+        relevant = jnp.logical_and(relevant,
+                                   (q_lo - (k_lo + bk - 1)) < window)
+
+    @pl.when(relevant)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)               # (bq, d)
+        k = k_ref[0].astype(jnp.float32)               # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        rows = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = jnp.ones((bq, bk), bool)
+        if causal:
+            ok &= cols <= rows
+        if window > 0:
+            ok &= (rows - cols) < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]                            # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                              preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, S, d); k, v: (B, Hkv, S, d) -> (B, H, S, d)."""
+    B, H, S, d = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    nq, nk = S // bq, S // bk
+    scale = 1.0 / np.sqrt(d)
+
+    qf = q.reshape(B * H, S, d)
+    kf = k.reshape(B * Hkv, S, d)
+    vf = v.reshape(B * Hkv, S, d)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq, bk=bk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, iq, ik: (bh // G, ik, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, iq, ik: (bh // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),    # acc
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),    # running sum l
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, d)

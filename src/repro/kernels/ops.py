@@ -1,0 +1,78 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites run everywhere
+(CPU containers execute the kernel bodies in interpret mode; TPU compiles
+them). Pytree-level helpers flatten/pad leaves into the kernels' (R, LANE)
+layout and give each leaf a disjoint slice of the counter space, so the
+noise stream is identical regardless of leaf boundaries or sharding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.zo_update import LANE, zo_update_flat
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _auto_interpret(interpret):
+    return (not on_tpu()) if interpret is None else interpret
+
+
+# ---------------------------------------------------------------------------
+# leaf + pytree ZO update
+# ---------------------------------------------------------------------------
+
+def zo_update_leaf(x: jnp.ndarray, seed, coeff, *, row_offset: int = 0,
+                   interpret=None) -> jnp.ndarray:
+    """y = x + coeff·u(seed) for an arbitrary-shaped leaf (pads to LANE).
+    ``row_offset`` positions the leaf in the (row, lane) counter space."""
+    interpret = _auto_interpret(interpret)
+    n = x.size
+    rows = -(-n // LANE)
+    flat = jnp.pad(x.reshape(-1), (0, rows * LANE - n)).reshape(rows, LANE)
+    out = zo_update_flat(flat, seed, coeff, offset=row_offset,
+                         interpret=interpret)
+    return out.reshape(-1)[:n].reshape(x.shape)
+
+
+def zo_update_tree(params: Any, seed, coeff, *, interpret=None) -> Any:
+    """Fused seed-replay update over a whole pytree. Each leaf gets a
+    disjoint counter ROW range (stable in tree structure; 2^32 rows × 1024
+    lanes of stream space — enough for multi-trillion-parameter trees)."""
+    leaves, treedef = jax.tree.flatten(params)
+    out = []
+    row = 0
+    for leaf in leaves:
+        rows = -(-leaf.size // LANE)
+        out.append(zo_update_leaf(leaf, seed, coeff, row_offset=row,
+                                  interpret=interpret))
+        row += rows
+    return jax.tree.unflatten(treedef, out)
+
+
+def zo_perturb_tree(params: Any, seed, eps, *, interpret=None) -> Any:
+    """x + eps·u — the perturbation side of SPSA (same noise stream)."""
+    return zo_update_tree(params, seed, eps, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm / flash attention
+# ---------------------------------------------------------------------------
+
+def rmsnorm_op(x, scale, *, eps: float = 1e-5, interpret=None):
+    return rmsnorm(x, scale, eps=eps, interpret=_auto_interpret(interpret))
+
+
+def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
+                       interpret=None, **kw):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=_auto_interpret(interpret), **kw)

@@ -1,0 +1,48 @@
+"""Blocked RMSNorm Pallas TPU kernel.
+
+Row-blocked: each grid step normalizes BLOCK_ROWS rows of width D entirely
+in VMEM (one HBM read + one write; mean-square reduction and rescale fused —
+no intermediate variance tensor in HBM). f32 math, output in input dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, *, eps: float = 1e-5,
+            block_rows: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """x: (..., D) -> (..., D). Rows are processed in VMEM blocks."""
+    orig_shape = x.shape
+    D = x.shape[-1]
+    xf = x.reshape(-1, D)
+    R = xf.shape[0]
+    rows = min(block_rows, R)
+    # pad rows to a block multiple
+    pad = (-R) % rows
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(xf.shape[0] // rows,),
+        in_specs=[
+            pl.BlockSpec((rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=interpret,
+    )(xf, scale)
+    if pad:
+        out = out[:R]
+    return out.reshape(orig_shape)

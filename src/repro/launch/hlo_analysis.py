@@ -1,0 +1,238 @@
+"""Post-optimization HLO analysis with call-graph expansion.
+
+XLA's ``compiled.cost_analysis()`` visits each while-loop body ONCE — a
+lax.scan over 72 layers (or M clients × τ ZO steps) under-reports FLOPs and
+bytes by the trip count, and collective bytes are not reported at all. This
+parser reconstructs step-level totals from the post-optimization HLO text.
+
+Two passes:
+  1. symbol table: instruction name -> result shape(s) (post-opt HLO
+     references operands by %name without inline types);
+  2. per-computation stats:
+       collectives : all-gather / all-reduce / reduce-scatter / all-to-all /
+                     collective-permute (+ async -start), operand bytes;
+       dot FLOPs   : 2 · |result| · |lhs contracting dims|  (matmuls dominate
+                     transformer compute; elementwise FLOPs excluded);
+       HBM bytes   : result + operand bytes of top-level ops. Fusion
+                     interiors are opaque — matching XLA's semantics that
+                     only fusion boundaries touch HBM.
+
+Expansion: ENTRY totals; while bodies × trip count (lax.scan lowers its
+bound to an ``s32[] constant(N)`` compare in the condition computation);
+fusions contribute their interior dot FLOPs ×1; call/conditional ×1.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_RESULT_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+([a-z][\w\-]*)")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_COND_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+_SKIP_BYTES_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast",
+                   "constant", "while", "call", "conditional", "iota",
+                   "after-all", "copy-start", "copy-done", "partition-id",
+                   "replica-id", "broadcast", "reshape", "transpose"}
+# in-place update ops: traffic = the update slice, not the full buffer
+_INPLACE_OPS = {"dynamic-update-slice", "scatter", "select-and-scatter"}
+
+
+def _shapes_bytes(shapes: List[Tuple[str, str]]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _dims_of(dims: str) -> List[int]:
+    return [int(d) for d in dims.split(",") if d]
+
+
+class CompStats:
+    __slots__ = ("coll", "flops", "bytes", "whiles", "calls")
+
+    def __init__(self):
+        self.coll: Dict[str, float] = defaultdict(float)
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.whiles: List[Tuple[str, str]] = []
+        self.calls: List[str] = []
+
+
+def parse_hlo(text: str):
+    lines = text.splitlines()
+    # ---- pass 1: symbol table (name -> list of shapes) ----
+    table: Dict[str, List[Tuple[str, str]]] = {}
+    for raw in lines:
+        line = raw.strip()
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        rm = _RESULT_RE.search(line)
+        if rm:
+            table[dm.group(1)] = _SHAPE_RE.findall(rm.group(1))
+
+    # ---- pass 2: per-computation stats ----
+    comps: Dict[str, CompStats] = defaultdict(CompStats)
+    consts: Dict[str, int] = {}
+    entry = None
+    current = None
+    for raw in lines:
+        line = raw.strip()
+        if "->" in line and line.endswith("{"):
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                current = m.group(2)
+                if m.group(1):
+                    entry = current
+                continue
+        if current is None or not line or line == "}":
+            continue
+        cm3 = _CONST_RE.search(line)
+        if cm3:
+            consts[current] = max(consts.get(current, 0), int(cm3.group(1)))
+        rm = _RESULT_RE.search(line)
+        if rm is None:
+            continue
+        st = comps[current]
+        opname = rm.group(2)
+        result_shapes = _SHAPE_RE.findall(rm.group(1))
+        # operands: %names inside the op's parens
+        args_seg = ""
+        paren = line.find(opname + "(", rm.start(2))
+        if paren >= 0:
+            depth = 0
+            start = paren + len(opname) + 1
+            for j in range(start, len(line)):
+                if line[j] == "(":
+                    depth += 1
+                elif line[j] == ")":
+                    if depth == 0:
+                        args_seg = line[start:j]
+                        break
+                    depth -= 1
+        operands = _OPERAND_RE.findall(args_seg)
+
+        base = opname.replace("-start", "")
+        if base in _COLLECTIVES:
+            op_shapes = [s for o in operands for s in table.get(o, [])]
+            st.coll[base] += _shapes_bytes(op_shapes or result_shapes)
+        elif opname == "dot":
+            lcm = _LHS_CONTRACT_RE.search(line)
+            if operands and lcm is not None:
+                lhs = table.get(operands[0], [])
+                if lhs:
+                    ldims = _dims_of(lhs[0][1])
+                    contract = 1
+                    for i in _dims_of(lcm.group(1)):
+                        if i < len(ldims):
+                            contract *= ldims[i]
+                    out = 1
+                    for d in (_dims_of(result_shapes[0][1])
+                              if result_shapes else []):
+                        out *= d
+                    st.flops += 2.0 * out * contract
+        if opname == "while":
+            wm = _WHILE_RE.search(line)
+            if wm:
+                st.whiles.append((wm.group(1), wm.group(2)))
+        elif opname in ("fusion", "call", "map", "reduce", "sort", "scatter",
+                        "reduce-window", "select-and-scatter"):
+            cm2 = _CALLS_RE.search(line)
+            if cm2:
+                st.calls.append(cm2.group(1))
+        elif opname == "conditional":
+            bm = _COND_BRANCH_RE.search(line)
+            if bm:
+                st.calls.extend(b.strip().lstrip("%")
+                                for b in bm.group(1).split(","))
+        if opname in _INPLACE_OPS:
+            # aliased update: count the update operand (read+write), not the
+            # full buffer (donated/in-place on TPU)
+            upd = (table.get(operands[1], []) if len(operands) > 1 else [])
+            st.bytes += 2 * _shapes_bytes(upd)
+        elif opname not in _SKIP_BYTES_OPS:
+            op_shapes = [s for o in operands for s in table.get(o, [])]
+            st.bytes += _shapes_bytes(result_shapes) + _shapes_bytes(op_shapes)
+    return comps, consts, entry
+
+
+def expanded_totals(text: str) -> Dict:
+    comps, consts, entry = parse_hlo(text)
+    memo: Dict[str, Dict] = {}
+
+    def walk(name: str, depth=0) -> Dict:
+        if name in memo:
+            return memo[name]
+        if depth > 64 or name not in comps:
+            return {"coll": {}, "flops": 0.0, "bytes": 0.0}
+        st = comps[name]
+        out = {"coll": dict(st.coll), "flops": st.flops, "bytes": st.bytes}
+        for callee in st.calls:
+            sub = walk(callee, depth + 1)
+            out["flops"] += sub["flops"]       # fusion interior dots count
+            for k, v in sub["coll"].items():
+                out["coll"][k] = out["coll"].get(k, 0.0) + v
+            # fusion interior bytes intentionally NOT added (HBM boundary)
+        for cond, body in st.whiles:
+            trips = max(consts.get(cond, 1), 1)
+            sub = walk(body, depth + 1)
+            out["flops"] += trips * sub["flops"]
+            out["bytes"] += trips * sub["bytes"]
+            for k, v in sub["coll"].items():
+                out["coll"][k] = out["coll"].get(k, 0.0) + trips * v
+        memo[name] = out
+        return out
+
+    if entry is None:
+        agg = {"coll": defaultdict(float), "flops": 0.0, "bytes": 0.0}
+        for st in comps.values():
+            agg["flops"] += st.flops
+            agg["bytes"] += st.bytes
+            for k, v in st.coll.items():
+                agg["coll"][k] += v
+        agg["coll"] = dict(agg["coll"])
+        return agg
+    return walk(entry)
+
+
+def analyze_compiled(compiled) -> Dict:
+    text = compiled.as_text()
+    tot = expanded_totals(text)
+    total = sum(tot["coll"].values())
+    counts = {k: len(re.findall(rf"\b{k}(-start)?\(", text))
+              for k in _COLLECTIVES}
+    return {
+        "bytes_by_kind": {k: float(v) for k, v in tot["coll"].items()},
+        "total_bytes": float(total),
+        "expanded_dot_flops": float(tot["flops"]),
+        "expanded_hbm_bytes": float(tot["bytes"]),
+        "static_op_counts": counts,
+        "summary": (f"total={total/2**30:.3f}GiB  "
+                    + "  ".join(f"{k}={v/2**30:.3f}GiB"
+                                for k, v in sorted(tot["coll"].items()))),
+    }

@@ -1,0 +1,176 @@
+"""Step builders: one (arch × shape × mesh) cell -> a jit-able step function
+with ShapeDtypeStruct inputs and NamedShardings. Shared by the dry-run, the
+roofline harness, and the real train/serve drivers.
+
+  train_4k            -> train_step = one MU-SplitFed global round
+  prefill_32k         -> prefill_step (prompt -> last logits + decode cache)
+  decode_32k/long_500k-> serve_step (one new token against a seq_len cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import MeshConfig, SFLConfig, ShapeConfig, get_config
+from repro.configs.base import ModelConfig
+from repro.core.splitfed import mu_splitfed_round
+from repro.models import init_cache, init_params, prefill, decode_step, untie_params
+from repro.sharding import batch_pspec, cache_pspecs, param_pspecs, plan_for
+from repro.sharding.specs import ctx_pspec
+from repro.sharding.planner import Plan
+
+
+class Cell(NamedTuple):
+    """Everything needed to lower one (arch × shape × mesh) combination."""
+    name: str
+    fn: Callable                 # jit-able step
+    args: tuple                  # ShapeDtypeStruct stand-ins
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    plan: Plan
+    cfg: ModelConfig
+    sfl: Optional[SFLConfig]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sharding_tree(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _param_setup(cfg: ModelConfig, mesh, plan: Plan, *, untied: bool):
+    if untied:
+        shapes = jax.eval_shape(
+            lambda: untie_params(cfg, init_params(cfg, jax.random.PRNGKey(0))))
+    else:
+        shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = param_pspecs(cfg, shapes, fsdp=plan.fsdp_axes,
+                          axis_sizes=_axis_sizes(mesh))
+    return shapes, _sharding_tree(mesh, pspecs)
+
+
+def _batch_shapes_train(cfg: ModelConfig, M: int, b: int, S: int):
+    batch = {"tokens": _sds((M, b, S), jnp.int32),
+             "labels": _sds((M, b, S), jnp.int32)}
+    if cfg.n_image_tokens > 0:
+        batch["image_embeds"] = _sds((M, b, cfg.n_image_tokens, cfg.d_model),
+                                     jnp.dtype(cfg.dtype))
+    if cfg.is_encoder_decoder:
+        batch["frames"] = _sds((M, b, cfg.n_audio_frames, cfg.d_model),
+                               jnp.dtype(cfg.dtype))
+    return batch
+
+
+def _batch_shardings_train(cfg, mesh, multi_pod, plan):
+    stacked = plan.client_mode == "parallel"
+    if stacked:
+        tok = batch_pspec("train", multi_pod, stacked_clients=True)
+        ctx = P("data", "pod" if multi_pod else None, None, None)
+    else:   # sequential: M is scanned; shard per-client batch over data (+SP)
+        tok = P(None, "data", "pod" if multi_pod else None)
+        ctx = P(None, "data", None, None)
+    spec = {"tokens": tok, "labels": tok}
+    if cfg.n_image_tokens > 0:
+        spec["image_embeds"] = ctx
+    if cfg.is_encoder_decoder:
+        spec["frames"] = ctx
+    return _sharding_tree(mesh, spec)
+
+
+def default_sfl(cfg: ModelConfig, n_clients: int = 16, tau: int = 2) -> SFLConfig:
+    return SFLConfig(n_clients=n_clients, tau=tau,
+                     cut_units=cfg.default_cut_units)
+
+
+def build_cell(arch: str, shape: ShapeConfig, mesh, *, smoke: bool = False,
+               sfl: Optional[SFLConfig] = None, aggregation: str = "dense",
+               tau: int = 2, eval_loss: bool = False) -> Cell:
+    cfg = get_config(arch, smoke=smoke)
+    multi_pod = "pod" in mesh.axis_names
+    mesh_cfg = MeshConfig(shape=tuple(mesh.devices.shape),
+                          axes=tuple(mesh.axis_names))
+    plan = plan_for(cfg, shape, mesh_cfg, aggregation)
+    rep = NamedSharding(mesh, P())
+    name = f"{arch}×{shape.name}×{'x'.join(map(str, mesh_cfg.shape))}"
+
+    if shape.kind == "train":
+        sfl = sfl or default_sfl(cfg, tau=tau)
+        M = sfl.n_clients
+        assert shape.global_batch % M == 0
+        b = shape.global_batch // M
+        pshapes, psh = _param_setup(cfg, mesh, plan, untied=True)
+        batch = _batch_shapes_train(cfg, M, b, shape.seq_len)
+        bsh = _batch_shardings_train(cfg, mesh, multi_pod, plan)
+        mask = _sds((M,), jnp.float32)
+        key = _sds((2,), jnp.uint32)
+
+        def fn(params, batches, active, k):
+            new_params, metrics = mu_splitfed_round(
+                cfg, sfl, params, batches, active, k,
+                client_mode=plan.client_mode, aggregation=plan.aggregation,
+                eval_loss=eval_loss)
+            return new_params, metrics.loss
+
+        return Cell(name, fn, (pshapes, batch, mask, key),
+                    (psh, bsh, rep, rep), (psh, rep), (0,), plan, cfg, sfl)
+
+    if shape.kind == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+        pshapes, psh = _param_setup(cfg, mesh, plan, untied=False)
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        bspec = {"tokens": batch_pspec("serve", multi_pod,
+                                       stacked_clients=False)}
+        if cfg.n_image_tokens > 0:
+            batch["image_embeds"] = _sds((B, cfg.n_image_tokens, cfg.d_model),
+                                         jnp.dtype(cfg.dtype))
+            bspec["image_embeds"] = ctx_pspec(multi_pod, stacked_clients=False)
+        if cfg.is_encoder_decoder:
+            batch["frames"] = _sds((B, cfg.n_audio_frames, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+            bspec["frames"] = ctx_pspec(multi_pod, stacked_clients=False)
+        bsh = _sharding_tree(mesh, bspec)
+        cache_shapes = jax.eval_shape(lambda: init_cache(cfg, B, S))
+        csh = _sharding_tree(mesh, cache_pspecs(cfg, cache_shapes, B, multi_pod,
+                                                axis_sizes=_axis_sizes(mesh)))
+
+        def fn(params, b_):
+            return prefill(cfg, params, b_, cache_len=S)
+
+        return Cell(name, fn, (pshapes, batch), (psh, bsh),
+                    (rep, csh), (), plan, cfg, None)
+
+    # decode (decode_32k / long_500k): one token against a seq_len cache
+    B, S = shape.global_batch, shape.seq_len
+    pshapes, psh = _param_setup(cfg, mesh, plan, untied=False)
+    cache_shapes = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    csh = _sharding_tree(mesh, cache_pspecs(cfg, cache_shapes, B, multi_pod,
+                                            axis_sizes=_axis_sizes(mesh)))
+    token = _sds((B, 1), jnp.int32)
+    tsh = _sharding_tree(mesh, P(("pod", "data") if multi_pod and B % 32 == 0
+                                 else ("data" if B % 16 == 0 else None), None))
+    pos = _sds((), jnp.int32)
+
+    def fn(params, tok, cache, p_):
+        return decode_step(cfg, params, tok, cache, p_)
+
+    return Cell(name, fn, (pshapes, token, cache_shapes, pos),
+                (psh, tsh, csh, rep), (rep, csh), (2,), plan, cfg, None)
+
+
+def lower_cell(cell: Cell):
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings,
+                     donate_argnums=cell.donate_argnums)
+    return jitted.lower(*cell.args)

@@ -1,0 +1,28 @@
+"""Model definitions: pure-functional JAX transformers (+SSM/hybrid/enc-dec).
+
+Public API:
+    init_params(cfg, key)             -> param pytree (stacked units, scan-ready)
+    loss_fn(cfg, params, batch)       -> scalar CE loss
+    split_params(cfg, params, cut)    -> (client_params, server_params)
+    client_forward(cfg, cp, batch)    -> cut-layer embedding h
+    server_forward(cfg, sp, h, batch) -> scalar loss
+    init_cache(cfg, batch, seq_len)   -> decode cache pytree
+    prefill(cfg, params, batch)       -> (logits_last, cache)
+    decode_step(cfg, params, token, cache, pos) -> (logits, cache)
+"""
+from repro.models.transformer import (
+    init_params,
+    loss_fn,
+    logits_fn,
+    split_params,
+    merge_params,
+    client_forward,
+    server_forward,
+    forward_from_cut,
+    init_cache,
+    prefill,
+    decode_step,
+    param_count,
+    split_dims,
+    untie_params,
+)

@@ -1,0 +1,331 @@
+"""Attention: GQA (full / causal / sliding-window, optional qk-norm),
+MLA (DeepSeek-V2, with absorbed-weight compressed-cache decode), and
+cross-attention (whisper decoder / llama-vision image layers).
+
+Decode paths operate on a KV cache laid out ``(B, H_kv, S_cache, d)`` (GQA)
+or ``(B, S_cache, r)`` (MLA compressed). Softmax reductions run over the
+cache-sequence dim; when that dim is sharded (flash-decoding style), GSPMD
+lowers the max/sum reductions to all-reduces — the partial-softmax merge is
+expressed by the reduction structure, not hand-written collectives.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rms_norm_simple
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attn(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    d, dh = cfg.d_model, cfg.d_head
+    ks = jax.random.split(key, 8)
+    if cfg.attn_impl == "mla":
+        qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+        p = {
+            "wkv_a": dense_init(ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_dim), dtype),
+            "kv_norm": jnp.ones((cfg.kv_lora_rank,), jnp.float32),
+            "wkv_b": dense_init(ks[3], (cfg.kv_lora_rank,
+                                        cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim)), dtype),
+            "wo": dense_init(ks[4], (cfg.n_heads * cfg.v_head_dim, d), dtype),
+        }
+        if cfg.q_lora_rank > 0:
+            p["wq_a"] = dense_init(ks[0], (d, cfg.q_lora_rank), dtype)
+            p["q_norm"] = jnp.ones((cfg.q_lora_rank,), jnp.float32)
+            p["wq_b"] = dense_init(ks[1], (cfg.q_lora_rank, cfg.n_heads * qk_dim), dtype)
+        else:
+            p["wq"] = dense_init(ks[0], (d, cfg.n_heads * qk_dim), dtype)
+        return p
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * dh), dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * dh), dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * dh), dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * dh, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def init_xattn(cfg: ModelConfig, key):
+    """Cross-attention (no rope; full MHA over a context stream)."""
+    dtype = jnp.dtype(cfg.dtype)
+    d, dh = cfg.d_model, cfg.d_head
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * dh), dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_heads * dh), dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_heads * dh), dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * dh, d), dtype),
+        "gate": jnp.zeros((), jnp.float32),   # llama-vision tanh gate
+    }
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+def _mask(S_q: int, S_k: int, causal: bool, window: int):
+    iq = jnp.arange(S_q)[:, None]
+    jk = jnp.arange(S_k)[None, :]
+    ok = jnp.ones((S_q, S_k), bool)
+    if causal:
+        ok &= jk <= iq
+    if window > 0:
+        ok &= (iq - jk) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# GQA full-sequence (train / prefill)
+# ---------------------------------------------------------------------------
+
+def gqa_attention(cfg: ModelConfig, p, x, positions, *, causal: bool = True):
+    """x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = H // Hkv
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, dh)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm_simple(q, p["q_norm"])
+        k = rms_norm_simple(k, p["k_norm"])
+    q = apply_rope(q.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta)  # (B,H,S,dh)
+    k = apply_rope(k.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta)  # (B,Hkv,S,dh)
+    q = q.reshape(B, Hkv, G, S, dh)
+    v = v.swapaxes(1, 2)                                                     # (B,Hkv,S,dh)
+    w = cfg.sliding_window
+    if causal and w > 0 and S > 2 * w and S % w == 0:
+        return _banded_swa(cfg, p, q, k, v, B, S, H, Hkv, G, dh)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = scores + _mask(S, S, causal, cfg.sliding_window)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,bktd->bskgd", probs, v).reshape(B, S, H * dh)
+    return out @ p["wo"]
+
+
+def _banded_swa(cfg: ModelConfig, p, q, k, v, B, S, H, Hkv, G, dh):
+    """Block-sparse sliding-window attention: with window w and w-sized
+    blocks, query block i only sees key blocks {i-1, i}. Exact equivalent
+    of the masked full computation, with O(S·2w) scores instead of O(S²)
+    (the jnp-path analogue of the flash kernel's block skipping)."""
+    w = cfg.sliding_window
+    nb = S // w
+    qb = q.reshape(B, Hkv, G, nb, w, dh)
+    kb = k.reshape(B, Hkv, nb, w, dh)
+    vb = v.reshape(B, Hkv, nb, w, dh)
+    zpad = jnp.zeros((B, Hkv, 1, w, dh), k.dtype)
+    kprev = jnp.concatenate([zpad, kb[:, :, :-1]], axis=2)
+    vprev = jnp.concatenate([zpad, vb[:, :, :-1]], axis=2)
+    k2 = jnp.concatenate([kprev, kb], axis=3)            # (B,Hkv,nb,2w,dh)
+    v2 = jnp.concatenate([vprev, vb], axis=3)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    scores = jnp.einsum("bkgnrd,bkntd->bkgnrt", qb, k2,
+                        preferred_element_type=jnp.float32) * scale
+    # in-band mask: key col c (0..2w-1) is visible to query row r iff
+    # r < c <= r + w  (i.e. causal + within window), plus block-0 has no
+    # predecessor block.
+    r = jnp.arange(w)[:, None]
+    c = jnp.arange(2 * w)[None, :]
+    ok = (c <= r + w) & (c > r)
+    first = jnp.arange(nb)[:, None, None] > 0
+    ok = ok[None] & (first | (c[None] >= w))             # (nb, w, 2w)
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgnrt,bkntd->bnrkgd", probs, v2)
+    out = out.reshape(B, S, H * dh)
+    return out @ p["wo"]
+
+
+def cross_attention(cfg: ModelConfig, p, x, ctx, *, gated: bool = False):
+    """x: (B, S, D) queries; ctx: (B, T, D) context (image/encoder stream)."""
+    B, S, D = x.shape
+    H, dh = cfg.n_heads, cfg.d_head
+    T = ctx.shape[1]
+    q = (x @ p["wq"]).reshape(B, S, H, dh).swapaxes(1, 2)
+    k = (ctx @ p["wk"]).reshape(B, T, H, dh).swapaxes(1, 2)
+    v = (ctx @ p["wv"]).reshape(B, T, H, dh).swapaxes(1, 2)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bhtd->bshd", probs, v).reshape(B, S, H * dh)
+    out = out @ p["wo"]
+    if gated:
+        out = out * jnp.tanh(p["gate"]).astype(out.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA decode (single token, ring-buffered KV cache for SWA)
+# ---------------------------------------------------------------------------
+
+def gqa_cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    return min(seq_len, cfg.sliding_window) if cfg.sliding_window > 0 else seq_len
+
+
+def gqa_init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    Sc = gqa_cache_len(cfg, seq_len)
+    dtype = jnp.dtype(cfg.dtype)
+    shape = (batch, cfg.n_kv_heads, Sc, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_decode(cfg: ModelConfig, p, x, cache, pos):
+    """x: (B, 1, D); pos: scalar int32 absolute position. Returns (out, cache)."""
+    B, _, D = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = H // Hkv
+    Sc = cache["k"].shape[2]
+    q = (x @ p["wq"]).reshape(B, H, 1, dh)
+    k = (x @ p["wk"]).reshape(B, Hkv, 1, dh)
+    v = (x @ p["wv"]).reshape(B, Hkv, 1, dh)
+    if cfg.qk_norm:
+        q = rms_norm_simple(q, p["q_norm"])
+        k = rms_norm_simple(k, p["k_norm"])
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, posb[:, None, :], cfg.rope_theta).reshape(B, Hkv, G, dh)
+    k = apply_rope(k, posb[:, None, :], cfg.rope_theta)
+    slot = jnp.where(cfg.sliding_window > 0, pos % Sc, pos).astype(jnp.int32)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, slot, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, slot, 0))
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bktd->bkgt", q, ck,
+                        preferred_element_type=jnp.float32) * scale
+    # validity: slots written so far (ring buffer fills monotonically)
+    valid = jnp.arange(Sc) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgt,bktd->bkgd", probs, cv).reshape(B, 1, H * dh)
+    return out @ p["wo"], {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# cross-attention decode cache (static context — filled once at prefill)
+# ---------------------------------------------------------------------------
+
+def xattn_init_cache(cfg: ModelConfig, batch: int, n_ctx: int):
+    dtype = jnp.dtype(cfg.dtype)
+    shape = (batch, cfg.n_heads, n_ctx, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def xattn_fill_cache(cfg: ModelConfig, p, ctx):
+    B, T, _ = ctx.shape
+    H, dh = cfg.n_heads, cfg.d_head
+    k = (ctx @ p["wk"]).reshape(B, T, H, dh).swapaxes(1, 2)
+    v = (ctx @ p["wv"]).reshape(B, T, H, dh).swapaxes(1, 2)
+    return {"k": k, "v": v}
+
+
+def xattn_decode(cfg: ModelConfig, p, x, cache, *, gated: bool = False):
+    B, _, D = x.shape
+    H, dh = cfg.n_heads, cfg.d_head
+    q = (x @ p["wq"]).reshape(B, 1, H, dh).swapaxes(1, 2)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, cache["k"],
+                        preferred_element_type=jnp.float32) * scale
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bhtd->bshd", probs, cache["v"]).reshape(B, 1, H * dh)
+    out = out @ p["wo"]
+    if gated:
+        out = out * jnp.tanh(p["gate"]).astype(out.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def _mla_q(cfg: ModelConfig, p, x):
+    B, S = x.shape[0], x.shape[1]
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if cfg.q_lora_rank > 0:
+        q = rms_norm_simple(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    return q.reshape(B, S, cfg.n_heads, qk_dim)
+
+
+def mla_attention(cfg: ModelConfig, p, x, positions, *, causal: bool = True):
+    """Full-sequence MLA. x: (B, S, D)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    nope, rope_d, vd, r = (cfg.qk_nope_dim, cfg.qk_rope_dim,
+                           cfg.v_head_dim, cfg.kv_lora_rank)
+    q = _mla_q(cfg, p, x)                                   # (B,S,H,nope+rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope.swapaxes(1, 2), positions[:, None, :],
+                        cfg.rope_theta).swapaxes(1, 2)      # (B,S,H,rope)
+    kv_a = x @ p["wkv_a"]                                   # (B,S,r+rope)
+    c_kv = rms_norm_simple(kv_a[..., :r], p["kv_norm"])
+    k_rope = apply_rope(kv_a[:, None, :, r:], positions[:, None, :],
+                        cfg.rope_theta)[:, 0]               # (B,S,rope)
+    kv = (c_kv @ p["wkv_b"]).reshape(B, S, H, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    scale = 1.0 / jnp.sqrt(nope + rope_d).astype(jnp.float32)
+    scores = (jnp.einsum("bshd,bthd->bhst", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshd,btd->bhst", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    scores = scores + _mask(S, S, causal, 0)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(B, S, H * vd)
+    return out @ p["wo"]
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    return {"c_kv": jnp.zeros((batch, seq_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, seq_len, cfg.qk_rope_dim), dtype)}
+
+
+def mla_decode(cfg: ModelConfig, p, x, cache, pos):
+    """Absorbed-weight MLA decode over the compressed cache.
+
+    score_h = (q_nope_h W_kb_h) . c_kv + q_rope_h . k_rope
+    out_h   = (probs @ c_kv) W_vb_h
+    The per-token cache holds only r + rope_d values — MLA's memory win.
+    """
+    B, _, D = x.shape
+    H = cfg.n_heads
+    nope, rope_d, vd, r = (cfg.qk_nope_dim, cfg.qk_rope_dim,
+                           cfg.v_head_dim, cfg.kv_lora_rank)
+    q = _mla_q(cfg, p, x)[:, 0]                             # (B,H,nope+rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    q_rope = apply_rope(q_rope[:, :, None, :], posb[:, None, :],
+                        cfg.rope_theta)[:, :, 0]            # (B,H,rope)
+    kv_a = (x @ p["wkv_a"])[:, 0]                           # (B, r+rope)
+    c_new = rms_norm_simple(kv_a[:, :r], p["kv_norm"])
+    k_rope_new = apply_rope(kv_a[:, None, None, r:], posb[:, None, :],
+                            cfg.rope_theta)[:, 0]           # (B,1,rope)
+    c_cache = jax.lax.dynamic_update_slice(cache["c_kv"], c_new[:, None, :],
+                                           (0, pos, 0))
+    r_cache = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new,
+                                           (0, pos, 0))
+    wkv_b = p["wkv_b"].reshape(r, H, nope + vd)
+    w_kb, w_vb = wkv_b[..., :nope], wkv_b[..., nope:]
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope, w_kb)
+    scale = 1.0 / jnp.sqrt(nope + rope_d).astype(jnp.float32)
+    scores = (jnp.einsum("bhr,btr->bht", q_abs, c_cache,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhn,btn->bht", q_rope, r_cache,
+                           preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(cache["c_kv"].shape[1]) <= pos
+    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bht,btr->bhr", probs, c_cache)       # (B,H,r)
+    out = jnp.einsum("bhr,rhv->bhv", o_lat, w_vb).reshape(B, 1, H * vd)
+    return out @ p["wo"], {"c_kv": c_cache, "k_rope": r_cache}

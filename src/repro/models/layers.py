@@ -1,0 +1,130 @@
+"""Primitive layers: norms, RoPE, MLPs, embeddings.
+
+All functions are pure; parameters are plain dicts of jnp arrays. Norm math
+runs in float32 and casts back to the input dtype (standard mixed-precision
+practice on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (matches common LM init)."""
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    if scale is None:
+        scale = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, key, d: int):
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm_type == "nonparam_ln":      # OLMo: no learned affine
+        return {}
+    raise ValueError(cfg.norm_type)
+
+
+def apply_norm(cfg: ModelConfig, p, x, eps: float = 1e-5):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    else:  # layernorm / nonparam_ln
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if cfg.norm_type == "layernorm":
+            out = out * p["scale"] + p["bias"]
+    return out.astype(dtype)
+
+
+def rms_norm_simple(x, scale, eps: float = 1e-5):
+    """Standalone RMSNorm used for qk-norm / MLA latent norms."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_rot: int, theta: float):
+    """Inverse frequencies for rotary embedding over the first d_rot dims."""
+    return 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot))
+
+
+def apply_rope(x, positions, theta: float, d_rot: int | None = None):
+    """x: (..., S, d_head); positions: broadcastable to (..., S).
+
+    Rotates the first ``d_rot`` dims (full head dim by default); the rest
+    pass through (MLA rotates only qk_rope_dim).
+    """
+    d_head = x.shape[-1]
+    if d_rot is None:
+        d_rot = d_head
+    inv = rope_freqs(d_rot, theta)                                  # (d_rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv            # (..., S, d_rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rot = jnp.stack([r1, r2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([rot, xp], axis=-1) if d_rot < d_head else rot
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, d_model: int, d_ff: int):
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {"wi": dense_init(k1, (d_model, d_ff), dtype),
+                "wg": dense_init(k2, (d_model, d_ff), dtype),
+                "wo": dense_init(k3, (d_ff, d_model), dtype)}
+    return {"wi": dense_init(k1, (d_model, d_ff), dtype),
+            "wo": dense_init(k3, (d_ff, d_model), dtype)}
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["wi"]) * (x @ p["wg"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"])
+    return h @ p["wo"]
+
+
+# expert-parallel variant: weights have a leading expert dim (E, ...)
+def apply_mlp_expert(cfg: ModelConfig, p, x):
+    """x: (E, C, D); weights (E, D, F)/(E, F, D). Batched per-expert matmul."""
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, p["wi"]))
+        h = h * jnp.einsum("ecd,edf->ecf", x, p["wg"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x, p["wi"]))
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"])

@@ -1,0 +1,106 @@
+"""Mixture-of-Experts block: top-k routing with static-shape, sort-based
+capacity dispatch (MegaBlocks/GShard hybrid — no (N, E, C) one-hot tensors),
+shared always-on experts (DeepSeek-V2 style), and a load-balancing aux loss.
+
+Expert weights carry a leading E dim so expert-parallelism is a pure
+sharding decision (E over the ``model`` axis when divisible, else the expert
+FFN hidden dim is tensor-parallel and E replicated — the planner decides).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_mlp, apply_mlp_expert, dense_init, init_mlp
+
+
+def moe_dims(cfg: ModelConfig):
+    m = cfg.moe
+    d_expert = m.d_expert if m.d_expert > 0 else cfg.d_ff
+    return m.n_experts, m.top_k, m.n_shared, d_expert
+
+
+def init_moe(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    E, k, n_shared, d_e = moe_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32, scale=0.02),
+        "wi": dense_init(ks[1], (E, d, d_e), dtype),
+        "wo": dense_init(ks[3], (E, d_e, d), dtype),
+    }
+    if cfg.mlp_type == "swiglu":
+        p["wg"] = dense_init(ks[2], (E, d, d_e), dtype)
+    if n_shared > 0:
+        p["shared"] = init_mlp(cfg, ks[4], d, n_shared * d_e)
+    return p
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(n_tokens * m.top_k * m.capacity_factor / m.n_experts)
+    return max(8, (c + 7) // 8 * 8)   # MXU-friendly multiple of 8
+
+
+def apply_moe(cfg: ModelConfig, p, x):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar f32).
+
+    Dispatch is GROUPED per batch row: each sequence routes/sorts/scatters
+    its own tokens with a per-group capacity, so with batch sharded over
+    'data' the whole dispatch is shard-LOCAL — no cross-device argsort or
+    scatter resharding (found via the §Perf iteration on jamba: a global
+    N-token sort cost TBs of collective-permute per round). Experts stay
+    EP-sharded over 'model'; only the expert einsums touch that axis.
+    """
+    B, S, D = x.shape
+    out, aux = jax.vmap(lambda xb: _moe_one_group(cfg, p, xb))(x)
+    return out, jnp.mean(aux)
+
+
+def _moe_one_group(cfg: ModelConfig, p, x):
+    """x: (N, D) one group's tokens -> (out (N, D), aux scalar)."""
+    N, D = x.shape
+    E, k, n_shared, d_e = moe_dims(cfg)
+    C = capacity(cfg, N)
+    xf = x
+
+    # --- routing (f32) ---
+    logits = (xf.astype(jnp.float32) @ p["router"])            # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_k, idx_k = jax.lax.top_k(probs, k)                    # (N, k)
+    gate_k = gate_k / jnp.sum(gate_k, axis=-1, keepdims=True)  # renormalize
+
+    # aux load-balancing loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.mean(jax.nn.one_hot(idx_k[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # --- static-shape sort-based dispatch ---
+    e_flat = idx_k.reshape(-1)                                 # (N*k,)
+    g_flat = gate_k.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(N), k)
+    counts = jnp.zeros((E,), jnp.int32).at[e_flat].add(1)
+    starts = jnp.cumsum(counts) - counts                       # (E,)
+    order = jnp.argsort(e_flat, stable=True)
+    rank_sorted = jnp.arange(N * k, dtype=jnp.int32) - starts[e_flat[order]]
+    rank = jnp.zeros((N * k,), jnp.int32).at[order].set(rank_sorted)
+    kept = rank < C
+    slot = jnp.where(kept, rank, C)                            # trash slot C
+
+    buf = jnp.zeros((E, C + 1, D), x.dtype)
+    buf = buf.at[e_flat, slot].set(xf[tok_flat])
+    expert_in = buf[:, :C]                                     # (E, C, D)
+
+    # --- expert FFNs (batched per-expert matmuls; EP-shardable on E) ---
+    expert_out = apply_mlp_expert(cfg, p, expert_in)           # (E, C, D)
+
+    # --- combine ---
+    gathered = expert_out[e_flat, jnp.minimum(slot, C - 1)]    # (N*k, D)
+    w = jnp.where(kept, g_flat, 0.0).astype(x.dtype)[:, None]
+    out = jnp.zeros((N, D), x.dtype).at[tok_flat].add(gathered * w)
+
+    if n_shared > 0:
+        out = out + apply_mlp(cfg, p["shared"], xf)
+    return out, aux

@@ -1,0 +1,363 @@
+"""State-space / recurrent blocks: Mamba (selective scan) and xLSTM
+(mLSTM chunkwise-parallel, sLSTM sequential).
+
+Each block exposes three entry points:
+    init_*         parameters
+    *_forward      full-sequence (train / prefill); returns (y, final_state)
+    *_decode       single-token step on a carried state (serve decode)
+
+States are pure pytrees so they slot into the generic cache machinery.
+Sequence processing is chunked (``cfg.*.chunk``) so the lowered HLO is a
+short scan of MXU-friendly blocks, not a token-level loop — this is the
+TPU adaptation of the CUDA selective-scan kernel (VMEM-resident chunk state,
+matmul-heavy intra-chunk math).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+# ===========================================================================
+# Mamba
+# ===========================================================================
+
+def mamba_dims(cfg: ModelConfig):
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    dt_rank = m.dt_rank if m.dt_rank > 0 else int(np.ceil(cfg.d_model / 16))
+    return d_inner, m.d_state, m.d_conv, dt_rank, m.chunk
+
+
+def init_mamba(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    d_in, N, d_conv, dt_rank, _ = mamba_dims(cfg)
+    ks = jax.random.split(key, 7)
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (d_in, N))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in), dtype),
+        "conv_w": dense_init(ks[1], (d_conv, d_in), dtype, scale=1.0 / np.sqrt(d_conv)),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": dense_init(ks[2], (d_in, dt_rank + 2 * N), dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_in), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((d_in,), 0.01, jnp.float32))),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_in, d), dtype),
+    }
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int):
+    d_in, N, d_conv, _, _ = mamba_dims(cfg)
+    return {"h": jnp.zeros((batch, d_in, N), jnp.float32),
+            "conv": jnp.zeros((batch, d_conv - 1, d_in), jnp.dtype(cfg.dtype))}
+
+
+def _mamba_conv_full(p, x, d_conv):
+    """Causal depthwise conv over (B, S, d_in)."""
+    B, S, d_in = x.shape
+    xp = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(d_conv):                               # d_conv is tiny (4)
+        out = out + xp[:, i:i + S].astype(jnp.float32) * p["conv_w"][i].astype(jnp.float32)
+    return (out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_scan_chunk(a, b, h0):
+    """Linear recurrence h_t = a_t * h_{t-1} + b_t within one chunk.
+
+    a, b: (L, B, d_in, N) f32; h0: (B, d_in, N). Returns (h_all, h_last).
+    """
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+    a_c, b_c = jax.lax.associative_scan(op, (a, b), axis=0)
+    h_all = a_c * h0[None] + b_c
+    return h_all, h_all[-1]
+
+
+def _mamba_ssm_params(cfg, p, xs):
+    """xs: (B, L, d_in) post-conv activations -> (dA, dBx, C) f32."""
+    d_in, N, _, dt_rank, _ = mamba_dims(cfg)
+    x_dbl = (xs @ p["x_proj"]).astype(jnp.float32)
+    dt, Bc, Cc = jnp.split(x_dbl, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])  # (B,L,d_in)
+    A = -jnp.exp(p["A_log"])                                        # (d_in, N)
+    dA = jnp.exp(dt[..., None] * A[None, None])                     # (B,L,d_in,N)
+    dBx = (dt * xs.astype(jnp.float32))[..., None] * Bc[:, :, None, :]
+    return dA, dBx, Cc
+
+
+def mamba_forward(cfg: ModelConfig, p, x, state=None):
+    """x: (B, S, D) -> (y (B, S, D), final_state)."""
+    B, S, D = x.shape
+    d_in, N, d_conv, dt_rank, chunk = mamba_dims(cfg)
+    if state is None:
+        state = mamba_init_state(cfg, B)
+    xz = x @ p["in_proj"]
+    xs_raw, z = jnp.split(xz, 2, axis=-1)
+    xs = jax.nn.silu(_mamba_conv_full(p, xs_raw, d_conv))
+
+    L = min(chunk, S)
+    n_chunks = S // L
+    rem = S - n_chunks * L
+
+    def body(h, xs_chunk):
+        dA, dBx, Cc = _mamba_ssm_params(cfg, p, xs_chunk)           # (B,L,...)
+        h_all, h_last = _ssm_scan_chunk(dA.swapaxes(0, 1), dBx.swapaxes(0, 1), h)
+        y = jnp.einsum("lbdn,bln->bld", h_all, Cc)                  # (B,L,d_in)
+        return h_last, y
+
+    xs_c = xs[:, :n_chunks * L].reshape(B, n_chunks, L, d_in).swapaxes(0, 1)
+    h_last, ys = jax.lax.scan(body, state["h"], xs_c)
+    ys = ys.swapaxes(0, 1).reshape(B, n_chunks * L, d_in)
+    if rem:                                                          # tail chunk
+        h_last, y_tail = body(h_last, xs[:, n_chunks * L:])
+        ys = jnp.concatenate([ys, y_tail], axis=1)
+    y = (ys + xs.astype(jnp.float32) * p["D"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    new_state = {"h": h_last, "conv": xs_raw[:, S - (d_conv - 1):, :]
+                 if S >= d_conv - 1 else state["conv"]}
+    return y @ p["out_proj"], new_state
+
+
+def mamba_decode(cfg: ModelConfig, p, x, state):
+    """x: (B, 1, D) -> (y (B, 1, D), state)."""
+    B = x.shape[0]
+    d_in, N, d_conv, dt_rank, _ = mamba_dims(cfg)
+    xz = x[:, 0] @ p["in_proj"]
+    xs_raw, z = jnp.split(xz, 2, axis=-1)                           # (B, d_in)
+    conv_buf = jnp.concatenate([state["conv"], xs_raw[:, None]], axis=1)  # (B,d_conv,d_in)
+    acc = jnp.einsum("bcd,cd->bd", conv_buf.astype(jnp.float32),
+                     p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xs = jax.nn.silu(acc.astype(x.dtype))                           # (B, d_in)
+    dA, dBx, Cc = _mamba_ssm_params(cfg, p, xs[:, None])
+    h = dA[:, 0] * state["h"] + dBx[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])
+    y = (y + xs.astype(jnp.float32) * p["D"]).astype(x.dtype) * jax.nn.silu(z)
+    return (y @ p["out_proj"])[:, None], {"h": h, "conv": conv_buf[:, 1:]}
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix-memory, chunkwise-parallel)
+# ===========================================================================
+
+def mlstm_dims(cfg: ModelConfig):
+    xc = cfg.xlstm
+    d_up = int(xc.proj_factor * cfg.d_model)
+    H = xc.n_heads
+    d_up = (d_up // H) * H
+    return d_up, H, d_up // H, xc.chunk
+
+
+def init_mlstm(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    d_up, H, dh, _ = mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * d_up), dtype),
+        "wq": dense_init(ks[1], (d_up, d_up), dtype),
+        "wk": dense_init(ks[2], (d_up, d_up), dtype),
+        "wv": dense_init(ks[3], (d_up, d_up), dtype),
+        "w_i": dense_init(ks[4], (d_up, H), jnp.float32, scale=0.02),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "w_f": dense_init(ks[5], (d_up, H), jnp.float32, scale=0.02),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),   # forget-open init
+        "w_down": dense_init(ks[6], (d_up, d), dtype),
+    }
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    _, H, dh, _ = mlstm_dims(cfg)
+    return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+def _mlstm_qkv_gates(cfg, p, x):
+    B, S, _ = x.shape
+    d_up, H, dh, _ = mlstm_dims(cfg)
+    up = x @ p["w_up"]
+    u, z = jnp.split(up, 2, axis=-1)
+    q = (u @ p["wq"]).reshape(B, S, H, dh)
+    k = ((u @ p["wk"]) / np.sqrt(dh)).reshape(B, S, H, dh)
+    v = (u @ p["wv"]).reshape(B, S, H, dh)
+    uf = u.astype(jnp.float32)
+    li = uf @ p["w_i"] + p["b_i"]                                   # log input gate
+    lf = jax.nn.log_sigmoid(uf @ p["w_f"] + p["b_f"])               # log forget gate
+    return q, k, v, li, lf, z
+
+
+def mlstm_forward(cfg: ModelConfig, p, x, state=None):
+    """Chunkwise-parallel mLSTM. x: (B, S, D) -> (y, final_state)."""
+    B, S, D = x.shape
+    d_up, H, dh, chunk = mlstm_dims(cfg)
+    if state is None:
+        state = mlstm_init_state(cfg, B)
+    q, k, v, li, lf, z = _mlstm_qkv_gates(cfg, p, x)
+    L = min(chunk, S)
+    nc = S // L
+    rem = S - nc * L
+    Sm = nc * L
+
+    def resh(t, last):
+        return t[:, :Sm].reshape((B, nc, L) + last).swapaxes(0, 1)
+    qc, kc, vc = resh(q, (H, dh)), resh(k, (H, dh)), resh(v, (H, dh))
+    lic, lfc = resh(li, (H,)), resh(lf, (H,))
+
+    def body(carry, xs):
+        C0, n0, m0 = carry
+        qx, kx, vx, lix, lfx = xs                                   # (B,Lc,H,*)
+        Lc = qx.shape[1]
+        csum = jnp.cumsum(lfx, axis=1)                              # (B,Lc,H)
+        # intra-chunk decay: D[t,s] = csum_t - csum_s + li_s  (s <= t)
+        Dm = (csum[:, :, None, :] - csum[:, None, :, :]
+              + lix[:, None, :, :])                                 # (B,Lc,Lc,H)
+        tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+        Dm = jnp.where(tri[None, :, :, None], Dm, -jnp.inf)
+        m_intra = jnp.max(Dm, axis=2)                               # (B,L,H)
+        m_inter = csum + m0[:, None, :]
+        m_t = jnp.maximum(m_intra, m_inter)                         # (B,L,H)
+        # inter contribution
+        sc_inter = jnp.exp(m_inter - m_t)                           # (B,L,H)
+        qf = qx.astype(jnp.float32)
+        h_inter = jnp.einsum("blhd,bhde->blhe", qf, C0) * sc_inter[..., None]
+        d_inter = jnp.einsum("blhd,bhd->blh", qf, n0) * sc_inter
+        # intra contribution
+        w = jnp.exp(Dm - m_t[:, :, None, :])                        # (B,L,L,H)
+        scores = jnp.einsum("blhd,bshd->blsh", qf, kx.astype(jnp.float32)) * w
+        h_intra = jnp.einsum("blsh,bshe->blhe", scores, vx.astype(jnp.float32))
+        d_intra = jnp.sum(scores, axis=2)                           # (B,L,H)
+        denom = jnp.maximum(jnp.abs(d_inter + d_intra), jnp.exp(-m_t))
+        h = (h_inter + h_intra) / denom[..., None]                  # (B,L,H,dh)
+        # end-of-chunk state
+        tot = csum[:, -1, :]                                        # (B,H)
+        dec_s = tot[:, None, :] - csum + lix                        # (B,L,H)
+        m_C = jnp.maximum(m0 + tot, jnp.max(dec_s, axis=1))         # (B,H)
+        wC = jnp.exp(dec_s - m_C[:, None, :])                       # (B,L,H)
+        C_new = (jnp.exp(m0 + tot - m_C)[..., None, None] * C0
+                 + jnp.einsum("blh,blhd,blhe->bhde",
+                              wC, kx.astype(jnp.float32), vx.astype(jnp.float32)))
+        n_new = (jnp.exp(m0 + tot - m_C)[..., None] * n0
+                 + jnp.einsum("blh,blhd->bhd", wC, kx.astype(jnp.float32)))
+        return (C_new, n_new, m_C), h
+
+    (C, n, m), hs = jax.lax.scan(body, (state["C"], state["n"], state["m"]),
+                                 (qc, kc, vc, lic, lfc))
+    h = hs.swapaxes(0, 1).reshape(B, Sm, H * dh)
+    if rem:                                                          # tail chunk
+        (C, n, m), h_tail = body((C, n, m),
+                                 (q[:, Sm:], k[:, Sm:], v[:, Sm:],
+                                  li[:, Sm:], lf[:, Sm:]))
+        h = jnp.concatenate([h, h_tail.reshape(B, rem, H * dh)], axis=1)
+    h = h.astype(x.dtype)
+    y = (h * jax.nn.silu(z)) @ p["w_down"]
+    return y, {"C": C, "n": n, "m": m}
+
+
+def mlstm_decode(cfg: ModelConfig, p, x, state):
+    B = x.shape[0]
+    d_up, H, dh, _ = mlstm_dims(cfg)
+    q, k, v, li, lf, z = _mlstm_qkv_gates(cfg, p, x)                # S=1
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]
+    li, lf, z = li[:, 0], lf[:, 0], z[:, 0]
+    m_new = jnp.maximum(lf + state["m"], li)                        # (B,H)
+    fs = jnp.exp(lf + state["m"] - m_new)
+    is_ = jnp.exp(li - m_new)
+    kf, vf, qf = (t.astype(jnp.float32) for t in (k, v, q))
+    C = fs[..., None, None] * state["C"] + is_[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :])
+    n = fs[..., None] * state["n"] + is_[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, d_up).astype(x.dtype)
+    y = (h * jax.nn.silu(z)) @ p["w_down"]
+    return y[:, None], {"C": C, "n": n, "m": m_new}
+
+
+# ===========================================================================
+# sLSTM (scalar-memory, strictly sequential)
+# ===========================================================================
+
+def slstm_dims(cfg: ModelConfig):
+    H = cfg.xlstm.n_heads
+    return H, cfg.d_model // H
+
+
+def init_slstm(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    H, dh = slstm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    d_ff = int(cfg.xlstm.slstm_proj_factor * d)
+    return {
+        "w_x": dense_init(ks[0], (d, 4 * d), dtype),         # z,i,f,o pre-acts
+        "r": dense_init(ks[1], (4, H, dh, dh), jnp.float32,
+                        scale=1.0 / np.sqrt(dh)),            # block-diag recurrent
+        "b": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                              jnp.full((d,), 3.0, jnp.float32),
+                              jnp.zeros((d,), jnp.float32)]),
+        "w_up": dense_init(ks[2], (d, 2 * d_ff), dtype),     # GeGLU post-ffn
+        "w_down": dense_init(ks[3], (d_ff, d), dtype),
+    }
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    H, dh = slstm_dims(cfg)
+    return {"c": jnp.zeros((batch, H, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "m": jnp.full((batch, H, dh), -1e30, jnp.float32),
+            "h": jnp.zeros((batch, H, dh), jnp.float32)}
+
+
+def _slstm_step(cfg, p, state, x_pre):
+    """x_pre: (B, 4*D) token pre-activations. Returns (state, h_out (B,D))."""
+    H, dh = slstm_dims(cfg)
+    B = x_pre.shape[0]
+    rec = jnp.einsum("bhd,ghde->bghe", state["h"], p["r"])          # (B,4,H,dh)
+    pre = (x_pre.astype(jnp.float32) + p["b"]).reshape(B, 4, H, dh) + rec
+    z_r, i_r, f_r, o_r = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    lf = jax.nn.log_sigmoid(f_r)
+    m_new = jnp.maximum(lf + state["m"], i_r)
+    i_g = jnp.exp(i_r - m_new)
+    f_g = jnp.exp(lf + state["m"] - m_new)
+    z = jnp.tanh(z_r)
+    o = jax.nn.sigmoid(o_r)
+    c = f_g * state["c"] + i_g * z
+    n = jnp.maximum(f_g * state["n"] + i_g, jnp.exp(-m_new))
+    h = o * c / n
+    return ({"c": c, "n": n, "m": m_new, "h": h}, h.reshape(B, H * dh))
+
+
+def slstm_forward(cfg: ModelConfig, p, x, state=None):
+    B, S, D = x.shape
+    if state is None:
+        state = slstm_init_state(cfg, B)
+    x_pre = x @ p["w_x"]                                            # (B,S,4D)
+
+    def body(st, xp):
+        st, h = _slstm_step(cfg, p, st, xp)
+        return st, h
+    state, hs = jax.lax.scan(body, state, x_pre.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)                           # (B,S,D)
+    up = h @ p["w_up"]
+    a, b = jnp.split(up, 2, axis=-1)
+    y = (jax.nn.gelu(a) * b) @ p["w_down"]
+    return y, state
+
+
+def slstm_decode(cfg: ModelConfig, p, x, state):
+    B = x.shape[0]
+    x_pre = (x[:, 0] @ p["w_x"])
+    state, h = _slstm_step(cfg, p, state, x_pre)
+    h = h.astype(x.dtype)
+    up = h @ p["w_up"]
+    a, b = jnp.split(up, 2, axis=-1)
+    y = (jax.nn.gelu(a) * b) @ p["w_down"]
+    return y[:, None], state

@@ -1,0 +1,610 @@
+"""Transformer assembly: unit-scanned heterogeneous blocks, the SFL
+split-point machinery (client prefix / server suffix at any unit boundary),
+chunked cross-entropy, and prefill/decode serving paths.
+
+Layer parameters are stacked along a leading ``n_units`` dim and consumed by
+``lax.scan`` so compile time and HLO size are independent of depth. A "unit"
+is one repetition of ``cfg.block_pattern`` (e.g. jamba's 8-layer
+mamba/attn interleave); the SFL cut lands on unit boundaries.
+
+Batch conventions
+    LM     : {"tokens": (B,S) i32, "labels": (B,S) i32}
+    VLM    : + {"image_embeds": (B, I, D)}
+    audio  : {"frames": (B, F, D)} + tokens/labels for the decoder
+    decode : {"token": (B,1) i32}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm
+from repro.models.layers import (apply_mlp, apply_norm, dense_init, embed_init,
+                                 init_mlp, init_norm)
+
+Params = Dict[str, Any]
+
+MOE_AUX_COEF = 0.01
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def _init_block(cfg: ModelConfig, key, btype: str, pos_in_unit: int) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": init_norm(cfg, ks[0], cfg.d_model)}
+    if btype == "attn":
+        p["core"] = attn.init_attn(cfg, ks[1])
+    elif btype == "xattn":
+        p["core"] = attn.init_xattn(cfg, ks[1])
+    elif btype == "mamba":
+        p["core"] = ssm.init_mamba(cfg, ks[1])
+    elif btype == "mlstm":
+        p["core"] = ssm.init_mlstm(cfg, ks[1])
+    elif btype == "slstm":
+        p["core"] = ssm.init_slstm(cfg, ks[1])
+    elif btype == "dec":  # whisper decoder block: self-attn + cross-attn
+        p["core"] = attn.init_attn(cfg, ks[1])
+        p["norm_x"] = init_norm(cfg, ks[2], cfg.d_model)
+        p["xattn"] = attn.init_xattn(cfg, ks[2])
+    else:
+        raise ValueError(btype)
+    if _has_ffn(cfg, btype):
+        p["norm2"] = init_norm(cfg, ks[2], cfg.d_model)
+        if cfg.layer_uses_moe(pos_in_unit):
+            p["ffn"] = moe_lib.init_moe(cfg, ks[3])
+        else:
+            p["ffn"] = init_mlp(cfg, ks[3], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _has_ffn(cfg: ModelConfig, btype: str) -> bool:
+    if btype in ("mlstm", "slstm"):
+        return False                      # xLSTM blocks are self-contained
+    return cfg.d_ff > 0 or cfg.moe is not None
+
+
+def _init_unit_stack(cfg: ModelConfig, key, pattern, n_units: int) -> Params:
+    """vmap init over units -> leaves with leading n_units dim."""
+    def one_unit(k):
+        kk = jax.random.split(k, len(pattern))
+        return {f"b{j}": _init_block(cfg, kk[j], bt, j)
+                for j, bt in enumerate(pattern)}
+    return jax.vmap(one_unit)(jax.random.split(key, n_units))
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    params: Params = {"embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype)}
+    if cfg.is_encoder_decoder:
+        enc_units = cfg.n_encoder_layers  # encoder pattern = ("attn",)
+        params["audio_proj"] = dense_init(ks[1], (cfg.d_model, cfg.d_model), dtype)
+        params["enc_units"] = _init_unit_stack(cfg, ks[2], ("attn",), enc_units)
+        params["enc_norm"] = init_norm(cfg, ks[3], cfg.d_model)
+        params["units"] = _init_unit_stack(cfg, ks[4], ("dec",), cfg.n_layers)
+    else:
+        if cfg.n_image_tokens > 0:
+            params["image_proj"] = dense_init(ks[1], (cfg.d_model, cfg.d_model), dtype)
+        params["units"] = _init_unit_stack(cfg, ks[4], cfg.block_pattern, cfg.n_units)
+    params["final_norm"] = init_norm(cfg, ks[5], cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[6], (cfg.d_model, cfg.vocab_size), dtype)
+    return params
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ===========================================================================
+# block application (full-sequence)
+# ===========================================================================
+
+def _apply_block(cfg: ModelConfig, p: Params, btype: str, x, positions, ctx,
+                 *, causal: bool):
+    """One block, full sequence. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, p["norm1"], x)
+    if btype == "attn":
+        if cfg.attn_impl == "mla":
+            x = x + attn.mla_attention(cfg, p["core"], h, positions, causal=causal)
+        else:
+            x = x + attn.gqa_attention(cfg, p["core"], h, positions, causal=causal)
+    elif btype == "xattn":
+        x = x + attn.cross_attention(cfg, p["core"], h, ctx, gated=True)
+    elif btype == "mamba":
+        y, _ = ssm.mamba_forward(cfg, p["core"], h)
+        x = x + y
+    elif btype == "mlstm":
+        y, _ = ssm.mlstm_forward(cfg, p["core"], h)
+        x = x + y
+    elif btype == "slstm":
+        y, _ = ssm.slstm_forward(cfg, p["core"], h)
+        x = x + y
+    elif btype == "dec":
+        x = x + attn.gqa_attention(cfg, p["core"], h, positions, causal=True)
+        hx = apply_norm(cfg, p["norm_x"], x)
+        x = x + attn.cross_attention(cfg, p["xattn"], hx, ctx)
+    if _has_ffn(cfg, btype):
+        h2 = apply_norm(cfg, p["norm2"], x)
+        # MoE-vs-MLP is static per pattern position; decided by param structure:
+        if "router" in p["ffn"]:
+            y, a = moe_lib.apply_moe(cfg, p["ffn"], h2)
+            aux = aux + a
+        else:
+            y = apply_mlp(cfg, p["ffn"], h2)
+        x = x + y
+    return x, aux
+
+
+def _unit_scan(cfg: ModelConfig, units: Params, x, positions, ctx, pattern,
+               *, causal: bool = True, remat: bool = False):
+    """Scan blocks over the stacked unit dim. Returns (x, aux_sum)."""
+    def body(carry, unit_p):
+        xx, aux = carry
+        for j, bt in enumerate(pattern):
+            xx, a = _apply_block(cfg, unit_p[f"b{j}"], bt, xx, positions, ctx,
+                                 causal=causal)
+            aux = aux + a
+        return (xx, aux), None
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), units)
+    return x, aux
+
+
+# ===========================================================================
+# embedding / frontends
+# ===========================================================================
+
+def _embed_tokens(cfg: ModelConfig, params: Params, tokens):
+    return params["embed"][tokens]          # gather; (B,S,D)
+
+
+def _context_stream(cfg: ModelConfig, params: Params, batch) -> Optional[jnp.ndarray]:
+    """Image / encoder stream the main stack cross-attends to (or None)."""
+    if cfg.n_image_tokens > 0:
+        return batch["image_embeds"] @ params["image_proj"]
+    return None
+
+
+# ===========================================================================
+# full forward / loss (with cut-point composition)
+# ===========================================================================
+
+def split_dims(cfg: ModelConfig, cut_units: int) -> Tuple[int, int]:
+    """(d_c, d_s) parameter counts for a cut (used by theory + planner).
+    Computed from abstract shapes (no allocation); tied models count the
+    untied server head copy on the server side (split untangles the tie)."""
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    size = lambda t: sum(int(np_prod(x.shape)) for x in jax.tree.leaves(t))
+    total = size(shapes)
+    if cfg.is_encoder_decoder:
+        per_enc = size(shapes["enc_units"]) // cfg.n_encoder_layers
+        d_c = size(shapes["audio_proj"]) + cut_units * per_enc
+    else:
+        per_unit = size(shapes["units"]) // cfg.n_units
+        d_c = size(shapes["embed"]) + cut_units * per_unit
+        if cfg.n_image_tokens > 0:
+            d_c += size(shapes["image_proj"])
+    extra_head = 0 if "lm_head" in shapes else size(shapes["embed"])
+    return d_c, total - d_c + extra_head
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def split_params(cfg: ModelConfig, params: Params, cut_units: int):
+    """Split at a unit boundary: client = embed/frontends + units[:cut];
+    server = units[cut:] + final norm + head. Enc-dec: the cut indexes
+    encoder units; the whole decoder is server-side."""
+    def take(tree, sl):
+        return jax.tree.map(lambda a: a[sl], tree)
+    cut = cut_units
+    client: Params = {"embed": params["embed"]}
+    server: Params = {"final_norm": params["final_norm"]}
+    # Tied models are untied at the cut: the server owns its own head copy
+    # (the tie cannot survive a client/server parameter split).
+    server["lm_head"] = params.get("lm_head")
+    if server["lm_head"] is None:
+        server["lm_head"] = params["embed"].T      # (D, V) head layout
+    if cfg.is_encoder_decoder:
+        assert 1 <= cut <= cfg.n_encoder_layers
+        client["audio_proj"] = params["audio_proj"]
+        client["units"] = take(params["enc_units"], slice(0, cut))
+        server["enc_units"] = take(params["enc_units"], slice(cut, None))
+        server["enc_norm"] = params["enc_norm"]
+        server["units"] = params["units"]
+        server["embed"] = params["embed"]        # decoder token embedding
+    else:
+        assert 1 <= cut <= cfg.n_units
+        if cfg.n_image_tokens > 0:
+            client["image_proj"] = params["image_proj"]
+        client["units"] = take(params["units"], slice(0, cut))
+        server["units"] = take(params["units"], slice(cut, None))
+    return client, server
+
+
+def merge_params(cfg: ModelConfig, client: Params, server: Params) -> Params:
+    """Inverse of split_params."""
+    params: Params = {"final_norm": server["final_norm"]}
+    if cfg.is_encoder_decoder:
+        params["embed"] = server["embed"]
+        params["audio_proj"] = client["audio_proj"]
+        params["enc_units"] = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], 0), client["units"],
+            server["enc_units"])
+        params["enc_norm"] = server["enc_norm"]
+        params["units"] = server["units"]
+    else:
+        params["embed"] = client["embed"]
+        if cfg.n_image_tokens > 0:
+            params["image_proj"] = client["image_proj"]
+        params["units"] = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], 0), client["units"],
+            server["units"])
+    params["lm_head"] = server["lm_head"]
+    return params
+
+
+def untie_params(cfg: ModelConfig, params: Params) -> Params:
+    """Give tied models an explicit head copy so split/merge round-trips keep
+    a stable tree structure (call once at SFL-training setup)."""
+    if "lm_head" in params:
+        return params
+    out = dict(params)
+    out["lm_head"] = params["embed"].T             # (D, V) head layout
+    return out
+
+
+def client_forward(cfg: ModelConfig, client: Params, batch, *, remat: bool = False):
+    """Client prefix -> cut-layer activation pytree ``h``."""
+    if cfg.is_encoder_decoder:
+        x = batch["frames"] @ client["audio_proj"]
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x, aux = _unit_scan(cfg, client["units"], x, positions, None,
+                            ("attn",), causal=False, remat=remat)
+        return {"h": x, "aux": aux}
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed_tokens(cfg, client, tokens)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    ctx = _context_stream(cfg, client, batch)
+    x, aux = _unit_scan(cfg, client["units"], x, positions, ctx,
+                        cfg.block_pattern, causal=True, remat=remat)
+    out = {"h": x, "aux": aux}   # client-side MoE aux rides the cut
+    if ctx is not None:
+        out["ctx"] = ctx
+    return out
+
+
+def server_forward(cfg: ModelConfig, server: Params, h, batch, *,
+                   remat: bool = False):
+    """Server suffix from the cut activation -> scalar loss (f32)."""
+    x = h["h"]
+    aux = h.get("aux", jnp.zeros((), jnp.float32))
+    if cfg.is_encoder_decoder:
+        B, F, _ = x.shape
+        pos_e = jnp.broadcast_to(jnp.arange(F), (B, F))
+        x, _ = _unit_scan(cfg, server["enc_units"], x, pos_e, None, ("attn",),
+                          causal=False, remat=remat)
+        enc_out = apply_norm(cfg, server["enc_norm"], x)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        y = server["embed"][tokens]
+        pos_d = jnp.broadcast_to(jnp.arange(S), (B, S))
+        y, aux_d = _unit_scan(cfg, server["units"], y, pos_d, enc_out,
+                              ("dec",), causal=True, remat=remat)
+        aux = aux + aux_d
+        x = y
+    else:
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        ctx = h.get("ctx")
+        x, aux_s = _unit_scan(cfg, server["units"], x, positions, ctx,
+                              cfg.block_pattern, causal=True, remat=remat)
+        aux = aux + aux_s
+    x = apply_norm(cfg, server["final_norm"], x)
+    loss = _chunked_ce(x, server["lm_head"], batch["labels"])
+    return loss + MOE_AUX_COEF * aux
+
+
+def forward_from_cut(cfg: ModelConfig, params: Params, batch, cut_units: int,
+                     *, remat: bool = False):
+    """Full loss via client/server composition (cut-invariant by design)."""
+    cp, sp = split_params(cfg, params, cut_units)
+    h = client_forward(cfg, cp, batch, remat=remat)
+    return server_forward(cfg, sp, h, batch, remat=remat)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch, *, remat: bool = False):
+    return forward_from_cut(cfg, params, batch, cfg.default_cut_units, remat=remat)
+
+
+def _chunked_ce(x, head, labels, chunk: int = 2048):
+    """Cross-entropy scanned over sequence chunks (bounds the (B,c,V) logits
+    buffer; essential for 150k vocabs at 32k context)."""
+    B, S, D = x.shape
+    c = min(chunk, S)
+    n = S // c
+    rem = S - n * c
+
+    def ce_of(xc, lc):
+        # f32 accumulation directly out of the MXU: one f32 logits tensor
+        # instead of bf16 logits + f32 convert (2x less CE traffic).
+        logits = jnp.einsum("bsd,dv->bsv", xc, head,
+                            preferred_element_type=jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None].clip(0), axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+    def body(carry, xs):
+        xc, lc = xs
+        s, m = ce_of(xc, lc)
+        return (carry[0] + s, carry[1] + m), None
+
+    xm = x[:, :n * c].reshape(B, n, c, D).swapaxes(0, 1)
+    lm = labels[:, :n * c].reshape(B, n, c).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (xm, lm))
+    if rem:
+        s, m = ce_of(x[:, n * c:], labels[:, n * c:])
+        tot, cnt = tot + s, cnt + m
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def logits_fn(cfg: ModelConfig, params: Params, batch):
+    """Full-sequence logits (B, S, V) — small configs / tests only."""
+    cp, sp = split_params(cfg, params, cfg.default_cut_units)
+    h = client_forward(cfg, cp, batch)
+    x = h["h"]
+    if cfg.is_encoder_decoder:
+        raise NotImplementedError("use prefill/decode for enc-dec logits")
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x, _ = _unit_scan(cfg, sp["units"], x, positions, h.get("ctx"),
+                      cfg.block_pattern, causal=True)
+    x = apply_norm(cfg, sp["final_norm"], x)
+    head = sp.get("lm_head", params.get("lm_head"))
+    if head is None:
+        head = params["embed"].T
+    return x @ head
+
+
+# ===========================================================================
+# serving: cache init / prefill / decode
+# ===========================================================================
+
+def _block_cache_init(cfg: ModelConfig, btype: str, batch: int, seq_len: int,
+                      n_ctx: int):
+    if btype in ("attn", "dec"):
+        c = (attn.mla_init_cache(cfg, batch, seq_len) if cfg.attn_impl == "mla"
+             else attn.gqa_init_cache(cfg, batch, seq_len))
+        if btype == "dec":
+            return {"self": c, "cross": attn.xattn_init_cache(cfg, batch, n_ctx)}
+        return c
+    if btype == "xattn":
+        return attn.xattn_init_cache(cfg, batch, n_ctx)
+    if btype == "mamba":
+        return ssm.mamba_init_state(cfg, batch)
+    if btype == "mlstm":
+        return ssm.mlstm_init_state(cfg, batch)
+    if btype == "slstm":
+        return ssm.slstm_init_state(cfg, batch)
+    raise ValueError(btype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    n_ctx = cfg.n_image_tokens or cfg.n_audio_frames or 1
+    pattern = ("dec",) if cfg.is_encoder_decoder else cfg.block_pattern
+    n_units = cfg.n_layers if cfg.is_encoder_decoder else cfg.n_units
+
+    unit_cache = {f"b{j}": _block_cache_init(cfg, bt, batch, seq_len, n_ctx)
+                  for j, bt in enumerate(pattern)}
+    stacked = jax.tree.map(lambda a: jnp.zeros((n_units,) + a.shape, a.dtype),
+                           unit_cache)
+
+    def patch(tree):   # mlstm/slstm 'm' stabilizers must start at -inf-ish
+        if isinstance(tree, dict):
+            return {k: (jnp.full(v.shape, -1e30, v.dtype)
+                        if k == "m" and not isinstance(v, dict) else patch(v))
+                    for k, v in tree.items()}
+        return tree
+    return patch(stacked)
+
+
+def _decode_block(cfg: ModelConfig, p: Params, btype: str, x, cache, pos, ctx):
+    h = apply_norm(cfg, p["norm1"], x)
+    if btype == "attn":
+        if cfg.attn_impl == "mla":
+            y, cache = attn.mla_decode(cfg, p["core"], h, cache, pos)
+        else:
+            y, cache = attn.gqa_decode(cfg, p["core"], h, cache, pos)
+        x = x + y
+    elif btype == "xattn":
+        x = x + attn.xattn_decode(cfg, p["core"], h, cache, gated=True)
+    elif btype == "mamba":
+        y, cache = ssm.mamba_decode(cfg, p["core"], h, cache)
+        x = x + y
+    elif btype == "mlstm":
+        y, cache = ssm.mlstm_decode(cfg, p["core"], h, cache)
+        x = x + y
+    elif btype == "slstm":
+        y, cache = ssm.slstm_decode(cfg, p["core"], h, cache)
+        x = x + y
+    elif btype == "dec":
+        if cfg.attn_impl == "mla":
+            y, sc = attn.mla_decode(cfg, p["core"], h, cache["self"], pos)
+        else:
+            y, sc = attn.gqa_decode(cfg, p["core"], h, cache["self"], pos)
+        x = x + y
+        hx = apply_norm(cfg, p["norm_x"], x)
+        x = x + attn.xattn_decode(cfg, p["xattn"], hx, cache["cross"])
+        cache = {"self": sc, "cross": cache["cross"]}
+    if _has_ffn(cfg, btype):
+        h2 = apply_norm(cfg, p["norm2"], x)
+        if "router" in p["ffn"]:
+            y, _ = moe_lib.apply_moe(cfg, p["ffn"], h2)
+        else:
+            y = apply_mlp(cfg, p["ffn"], h2)
+        x = x + y
+    return x, cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, token, cache, pos):
+    """One-token decode. token: (B,1) i32; pos: scalar i32 absolute position.
+    Returns (logits (B,1,V), new_cache)."""
+    pattern = ("dec",) if cfg.is_encoder_decoder else cfg.block_pattern
+    units = params["units"]
+    x = _embed_tokens(cfg, params, token)
+
+    def body(x, xs):
+        unit_p, unit_c = xs
+        new_c = {}
+        for j, bt in enumerate(pattern):
+            x, c = _decode_block(cfg, unit_p[f"b{j}"], bt, x, unit_c[f"b{j}"],
+                                 pos, None)
+            new_c[f"b{j}"] = c
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (units, cache))
+    x = apply_norm(cfg, params["final_norm"], x)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    return x @ head, new_cache
+
+
+# ---- prefill ---------------------------------------------------------------
+
+def _prefill_block(cfg: ModelConfig, p: Params, btype: str, x, positions, ctx,
+                   seq_len: int):
+    """Full-sequence pass that also materializes the decode cache."""
+    from repro.models.attention import gqa_cache_len
+    h = apply_norm(cfg, p["norm1"], x)
+    B, S, _ = x.shape
+    if btype in ("attn", "dec"):
+        core = p["core"]
+        if cfg.attn_impl == "mla":
+            y = attn.mla_attention(cfg, core, h, positions, causal=True)
+            kv_a = h @ core["wkv_a"]
+            from repro.models.layers import rms_norm_simple, apply_rope
+            r = cfg.kv_lora_rank
+            c_kv = rms_norm_simple(kv_a[..., :r], core["kv_norm"])
+            k_rope = apply_rope(kv_a[:, None, :, r:], positions[:, None, :],
+                                cfg.rope_theta)[:, 0]
+            cache = {"c_kv": _right_pad(c_kv, seq_len, 1),
+                     "k_rope": _right_pad(k_rope, seq_len, 1)}
+        else:
+            y = attn.gqa_attention(cfg, core, h, positions, causal=True)
+            from repro.models.layers import rms_norm_simple, apply_rope
+            Hkv, dh = cfg.n_kv_heads, cfg.d_head
+            k = (h @ core["wk"]).reshape(B, S, Hkv, dh)
+            v = (h @ core["wv"]).reshape(B, S, Hkv, dh)
+            if cfg.qk_norm:
+                k = rms_norm_simple(k, core["k_norm"])
+            k = apply_rope(k.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta)
+            v = v.swapaxes(1, 2)
+            Sc = gqa_cache_len(cfg, max(seq_len, S))
+            if Sc < S:     # sliding-window ring: keep last Sc positions
+                pos_keep = jnp.arange(S - Sc, S)
+                slots = pos_keep % Sc
+                ck = jnp.zeros((B, Hkv, Sc, dh), k.dtype).at[:, :, slots].set(
+                    k[:, :, pos_keep])
+                cv = jnp.zeros((B, Hkv, Sc, dh), v.dtype).at[:, :, slots].set(
+                    v[:, :, pos_keep])
+            else:
+                ck, cv = _right_pad(k, Sc, 2), _right_pad(v, Sc, 2)
+            cache = {"k": ck, "v": cv}
+        if btype == "dec":
+            xout = x + y
+            hx = apply_norm(cfg, p["norm_x"], xout)
+            xout = xout + attn.cross_attention(cfg, p["xattn"], hx, ctx)
+            cache = {"self": cache,
+                     "cross": attn.xattn_fill_cache(cfg, p["xattn"], ctx)}
+        else:
+            xout = x + y
+    elif btype == "xattn":
+        xout = x + attn.cross_attention(cfg, p["core"], h, ctx, gated=True)
+        cache = attn.xattn_fill_cache(cfg, p["core"], ctx)
+    elif btype == "mamba":
+        y, cache = ssm.mamba_forward(cfg, p["core"], h)
+        xout = x + y
+    elif btype == "mlstm":
+        y, cache = ssm.mlstm_forward(cfg, p["core"], h)
+        xout = x + y
+    elif btype == "slstm":
+        y, cache = ssm.slstm_forward(cfg, p["core"], h)
+        xout = x + y
+    else:
+        raise ValueError(btype)
+    if _has_ffn(cfg, btype):
+        h2 = apply_norm(cfg, p["norm2"], xout)
+        if "router" in p["ffn"]:
+            y2, _ = moe_lib.apply_moe(cfg, p["ffn"], h2)
+        else:
+            y2 = apply_mlp(cfg, p["ffn"], h2)
+        xout = xout + y2
+    return xout, cache
+
+
+def _right_pad(a, target: int, axis: int):
+    pad = target - a.shape[axis]
+    if pad <= 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def prefill(cfg: ModelConfig, params: Params, batch, *, cache_len: int = 0):
+    """Run the full prompt, building the decode cache.
+    Returns (logits_last (B,1,V), cache)."""
+    if cfg.is_encoder_decoder:
+        x = batch["frames"] @ params["audio_proj"]
+        B, F, _ = x.shape
+        pos_e = jnp.broadcast_to(jnp.arange(F), (B, F))
+        x, _ = _unit_scan(cfg, params["enc_units"], x, pos_e, None, ("attn",),
+                          causal=False)
+        enc_out = apply_norm(cfg, params["enc_norm"], x)
+        tokens = batch["tokens"]
+        ctx = enc_out
+        pattern = ("dec",)
+        units = params["units"]
+    else:
+        tokens = batch["tokens"]
+        ctx = _context_stream(cfg, params, batch)
+        pattern = cfg.block_pattern
+        units = params["units"]
+    B, S = tokens.shape
+    seq_len = max(cache_len, S)
+    x = _embed_tokens(cfg, params, tokens)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, unit_p):
+        caches = {}
+        for j, bt in enumerate(pattern):
+            x, c = _prefill_block(cfg, unit_p[f"b{j}"], bt, x, positions, ctx,
+                                  seq_len)
+            caches[f"b{j}"] = c
+        return x, caches
+
+    x, cache = jax.lax.scan(body, x, units)
+    x = apply_norm(cfg, params["final_norm"], x[:, -1:])
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    return x @ head, cache

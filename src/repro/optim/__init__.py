@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (OptState, adamw_init, adamw_update,
+                                    momentum_init, momentum_update, sgd_update,
+                                    make_optimizer)
+from repro.optim.schedules import constant, cosine, linear_warmup
+from repro.optim.lora import apply_lora, init_lora, lora_param_count

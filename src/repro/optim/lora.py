@@ -1,0 +1,63 @@
+"""LoRA adapters for the FedLoRA baseline (paper Fig. 4 memory comparison).
+
+Adapters target the attention projections (wq/wv) of every unit. The
+adapter tree mirrors the param tree sparsely: {unit_key: {"b<j>": {"core":
+{"wq": (A, B), "wv": (A, B)}}}} with A: (n_units, in, r), B: (n_units, r,
+out). ``apply_lora`` materializes W + (α/r)·A@B before the forward — grads
+w.r.t. (A, B) flow through jax.grad on the composed function.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+TARGETS = ("wq", "wv")
+
+
+def init_lora(cfg: ModelConfig, params, rank: int, key) -> Dict:
+    lora: Dict = {}
+    units = params["units"]
+    out_units: Dict = {}
+    for bkey, block in units.items():
+        core = block.get("core", {})
+        hit = {t: core[t] for t in TARGETS if isinstance(core, dict) and t in core}
+        if not hit:
+            continue
+        entry = {}
+        for t, w in hit.items():
+            n_units, d_in, d_out = w.shape
+            key, k1 = jax.random.split(key)
+            A = (jax.random.normal(k1, (n_units, d_in, rank), jnp.float32)
+                 * 0.01).astype(w.dtype)
+            B = jnp.zeros((n_units, rank, d_out), w.dtype)
+            entry[t] = {"A": A, "B": B}
+        out_units[bkey] = {"core": entry}
+    lora["units"] = out_units
+    return lora
+
+
+def apply_lora(params, lora, alpha: float = 16.0):
+    """Materialize W' = W + (α/r)·A@B for adapted leaves (pure)."""
+    import copy
+    new = dict(params)
+    new_units = dict(params["units"])
+    for bkey, entry in lora["units"].items():
+        blk = dict(new_units[bkey])
+        core = dict(blk["core"])
+        for t, ab in entry["core"].items():
+            r = ab["A"].shape[-1]
+            delta = jnp.einsum("uir,uro->uio", ab["A"].astype(jnp.float32),
+                               ab["B"].astype(jnp.float32)) * (alpha / r)
+            core[t] = (core[t].astype(jnp.float32) + delta).astype(core[t].dtype)
+        blk["core"] = core
+        new_units[bkey] = blk
+    new["units"] = new_units
+    return new
+
+
+def lora_param_count(lora) -> int:
+    return sum(x.size for x in jax.tree.leaves(lora))

@@ -1,0 +1,84 @@
+"""First-order optimizers from scratch (for the FedAvg/FedLoRA baselines and
+the FO comparison arm). Pytree-generic, functional, jit-safe.
+
+ZO training (the paper's path) deliberately has NO optimizer state — that is
+its memory story; see core/zo.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any          # first moment (or momentum buffer); None for plain SGD
+    nu: Any          # second moment; None unless adam
+
+
+# --- SGD -------------------------------------------------------------------
+
+def sgd_update(params: Params, grads: Params, lr) -> Params:
+    return jax.tree.map(lambda p, g: (p - lr * g.astype(jnp.float32)
+                                      ).astype(p.dtype), params, grads)
+
+
+# --- SGD + momentum ----------------------------------------------------------
+
+def momentum_init(params: Params) -> OptState:
+    mu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(jnp.zeros((), jnp.int32), mu, None)
+
+
+def momentum_update(params: Params, grads: Params, state: OptState, lr,
+                    beta: float = 0.9) -> Tuple[Params, OptState]:
+    mu = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32),
+                      state.mu, grads)
+    new = jax.tree.map(lambda p, m: (p - lr * m).astype(p.dtype), params, mu)
+    return new, OptState(state.step + 1, mu, None)
+
+
+# --- AdamW -------------------------------------------------------------------
+
+def adamw_init(params: Params) -> OptState:
+    z = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(jnp.zeros((), jnp.int32), z(), z())
+
+
+def adamw_update(params: Params, grads: Params, state: OptState, lr,
+                 b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                 weight_decay: float = 0.0) -> Tuple[Params, OptState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                      * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+    bc1, bc2 = 1 - b1 ** t, 1 - b2 ** t
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        step_ = lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay
+                      * p.astype(jnp.float32))
+        return (p - step_).astype(p.dtype)
+    return jax.tree.map(upd, params, mu, nu), OptState(step, mu, nu)
+
+
+# --- factory -----------------------------------------------------------------
+
+def make_optimizer(name: str):
+    """Returns (init_fn, update_fn(params, grads, state, lr))."""
+    if name == "sgd":
+        return (lambda p: OptState(jnp.zeros((), jnp.int32), None, None),
+                lambda p, g, s, lr: (sgd_update(p, g, lr),
+                                     OptState(s.step + 1, None, None)))
+    if name == "momentum":
+        return momentum_init, momentum_update
+    if name in ("adam", "adamw"):
+        return adamw_init, adamw_update
+    raise ValueError(name)

@@ -1,0 +1,2 @@
+from repro.sharding.specs import batch_pspec, param_pspecs, cache_pspecs
+from repro.sharding.planner import Plan, plan_for

@@ -1,0 +1,59 @@
+"""Memory-aware layout planner.
+
+Decides, per (arch × shape × mesh):
+  * fsdp axis      — None | 'data' | ('pod','data'): weight sharding beyond TP
+  * client_mode    — 'parallel' (vmap M over 'data') vs 'sequential'
+                     (scan over clients; one FSDP'd working copy)
+  * aggregation    — 'dense' vs 'seed_replay'
+
+Heuristic: v5e has 16 GiB HBM/chip. TP-only per-chip weight bytes
+2·P/16; if that exceeds PARALLEL_BUDGET the per-client replicas of
+client-parallel mode can't fit and we go sequential + FSDP. The dry-run's
+memory_analysis() is the ground truth that validates the plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.configs.base import MeshConfig, ModelConfig, ShapeConfig
+from repro.models import split_dims
+
+HBM_PER_CHIP = 16 * 2 ** 30          # v5e
+PARALLEL_BUDGET = 6 * 2 ** 30        # TP-shard of server params + working set
+FSDP_BUDGET = 10 * 2 ** 30
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    fsdp: Optional[Tuple[str, ...]]   # axis name tuple or None
+    client_mode: str                  # parallel | sequential
+    aggregation: str                  # dense | seed_replay
+    tp_bytes_per_chip: int            # estimate backing the decision
+
+    @property
+    def fsdp_axes(self):
+        if self.fsdp is None:
+            return None
+        return self.fsdp if len(self.fsdp) > 1 else self.fsdp[0]
+
+
+def model_bytes(cfg: ModelConfig) -> int:
+    d_c, d_s = split_dims(cfg, cfg.default_cut_units)
+    return 2 * (d_c + d_s)            # bf16
+
+
+def plan_for(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
+             aggregation: str = "dense") -> Plan:
+    tp = mesh.shape[-1]
+    tp_bytes = model_bytes(cfg) // tp
+    multi_pod = len(mesh.shape) == 3
+    if shape.kind != "train":
+        # serving: weights always fit TP-sharded except the giants -> FSDP
+        fsdp = None if tp_bytes <= FSDP_BUDGET else (
+            ("pod", "data") if multi_pod else ("data",))
+        return Plan(fsdp, "parallel", aggregation, tp_bytes)
+    if tp_bytes <= PARALLEL_BUDGET:
+        return Plan(None, "parallel", aggregation, tp_bytes)
+    fsdp = ("pod", "data") if multi_pod else ("data",)
+    return Plan(fsdp, "sequential", aggregation, tp_bytes)

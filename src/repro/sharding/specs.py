@@ -1,0 +1,166 @@
+"""Parameter / batch / cache PartitionSpec rules.
+
+Conventions (mesh axes: optional 'pod', then 'data', 'model'):
+  'model' : tensor parallelism — attention head projections, FFN hidden,
+            expert dim (EP) when divisible, vocab for embed/head.
+  fsdp    : optional weight sharding over 'data' (or ('pod','data')) for
+            archs whose TP-sharded weights exceed the per-chip budget.
+  batch / client dims ride 'data' (+'pod').
+
+Every rule is divisibility-guarded: a dim that doesn't divide the mesh axis
+falls back to replication (pjit rejects uneven in_shardings). Specs are
+*performance hints* — GSPMD keeps the math correct for any choice; the
+roofline pass measures how good the hints are. Rules are name-based over
+the param tree; stacked unit dims (leading n_units from the scan layout)
+are never sharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# column-parallel: output features on 'model'
+_COL = {"wq", "wk", "wv", "wi", "wg", "in_proj", "w_up", "w_x",
+        "wq_a", "wq_b", "wkv_a", "wkv_b", "lm_head", "image_proj",
+        "audio_proj"}
+# row-parallel: input features on 'model'
+_ROW = {"wo", "out_proj", "w_down", "x_proj", "dt_proj"}
+# feature-sharded vectors / matrices keyed on the d_inner/d_up dim
+_FEAT0 = {"A_log", "D", "dt_bias", "conv_b"}
+_MODEL_IN = {"w_i", "w_f"}
+
+DEFAULT_AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _leaf_name(path) -> str:
+    return str(getattr(path[-1], "key", getattr(path[-1], "idx", path[-1])))
+
+
+def _path_has(path, name: str) -> bool:
+    return any(str(getattr(p, "key", "")) == name for p in path)
+
+
+def _axsize(axis, sizes: Dict[str, int]) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(axis, 1)
+
+
+def _guard(dim: int, axis, sizes: Dict[str, int]):
+    """axis if dim divides the axis size, else None (replicate)."""
+    return axis if (axis is not None and dim % _axsize(axis, sizes) == 0) \
+        else None
+
+
+def param_pspecs(cfg: ModelConfig, shapes: Any, *, fsdp: Optional[Any] = None,
+                 model_axis: str = "model",
+                 axis_sizes: Optional[Dict[str, int]] = None) -> Any:
+    """PartitionSpec tree mirroring ``shapes`` (arrays or ShapeDtypeStructs).
+
+    fsdp: None, 'data', or ('pod','data') — the weight-sharding axis.
+    """
+    M = model_axis
+    sizes = axis_sizes or DEFAULT_AXIS_SIZES
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        stacked = _path_has(path, "units") or _path_has(path, "enc_units")
+        lead = (None,) * (1 if stacked else 0)
+        dims = shape[(1 if stacked else 0):]
+        g = lambda i, ax: _guard(dims[i], ax, sizes)
+
+        # --- MoE expert weights: (E, D, F) ---
+        if name in ("wi", "wg", "wo") and len(dims) == 3:
+            if dims[0] % _axsize(M, sizes) == 0:   # EP: experts over model
+                return P(*lead, M, g(1, fsdp), None)
+            if name == "wo":                       # TP inside experts
+                return P(*lead, None, g(1, M), g(2, fsdp))
+            return P(*lead, None, g(1, fsdp), g(2, M))
+        if name == "router":
+            return P(*lead, g(0, fsdp), None)
+        if name == "embed" and not stacked:
+            return P(_guard(shape[0], M, sizes), _guard(shape[1], fsdp, sizes))
+        if name in _COL and len(dims) == 2:
+            return P(*lead, g(0, fsdp), g(1, M))
+        if name in _ROW and len(dims) == 2:
+            return P(*lead, g(0, M), g(1, fsdp))
+        if name in _MODEL_IN and len(dims) == 2:
+            return P(*lead, g(0, M), None)
+        if name == "conv_w" and len(dims) == 2:
+            return P(*lead, None, g(1, M))
+        if name in _FEAT0 and len(dims) >= 1:
+            return P(*lead, g(0, M), *((None,) * (len(dims) - 1)))
+        # norms, biases, gates, sLSTM recurrent blocks: replicate
+        return P(*lead, *((None,) * len(dims)))
+
+    return jax.tree_util.tree_map_with_path(rule, shapes)
+
+
+def batch_pspec(kind: str, multi_pod: bool, *, stacked_clients: bool) -> P:
+    """Spec for token-like batch leaves.
+
+    train (stacked M, b, S): M -> 'data', per-client batch b -> 'pod'.
+    serve (B, S) / (B, 1):   B -> ('pod','data') | 'data'.
+    """
+    if stacked_clients:
+        return P("data", "pod" if multi_pod else None, None)
+    return P(("pod", "data") if multi_pod else "data", None)
+
+
+def ctx_pspec(multi_pod: bool, *, stacked_clients: bool) -> P:
+    """image_embeds / frames: (…, T, D) with batch dims as batch_pspec."""
+    if stacked_clients:
+        return P("data", "pod" if multi_pod else None, None, None)
+    return P(("pod", "data") if multi_pod else "data", None, None)
+
+
+def cache_pspecs(cfg: ModelConfig, cache_shapes: Any, batch: int,
+                 multi_pod: bool, model_axis: str = "model",
+                 axis_sizes: Optional[Dict[str, int]] = None) -> Any:
+    """Decode-cache specs. Layout decisions:
+
+    * KV/latent caches: batch over 'data' when it divides; the cache
+      sequence dim over 'model' (flash-decoding: the softmax reductions over
+      the sharded seq dim lower to small all-reduces). For global_batch=1
+      (long_500k) the seq dim takes BOTH ('data','model') (+'pod').
+    * SSM/recurrent states: feature dims over 'model', batch over 'data'.
+    """
+    sizes = axis_sizes or DEFAULT_AXIS_SIZES
+    data_ax = ("pod", "data") if multi_pod else "data"
+    batch_ok = batch % _axsize(data_ax, sizes) == 0
+    if not batch_ok and batch % sizes.get("data", 16) == 0:
+        data_ax, batch_ok = "data", True
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape               # (n_units, B, ...)
+        b_ax = data_ax if batch_ok else None
+        wide_seq = (model_axis if batch_ok else
+                    (("pod", "data", "model") if multi_pod
+                     else ("data", "model")))
+        if name in ("k", "v") and len(shape) == 5:     # (u,B,H,S,dh)
+            return P(None, b_ax, None, _guard(shape[3], wide_seq, sizes),
+                     None)
+        if name in ("c_kv", "k_rope") and len(shape) == 4:  # (u,B,S,r)
+            return P(None, b_ax, _guard(shape[2], wide_seq, sizes), None)
+        if name == "h" and len(shape) == 4:            # mamba (u,B,d_in,N)
+            return P(None, b_ax, _guard(shape[2], model_axis, sizes), None)
+        if name == "conv" and len(shape) == 4:         # (u,B,d_conv-1,d_in)
+            return P(None, b_ax, None, _guard(shape[3], model_axis, sizes))
+        if name == "C" and len(shape) == 5:            # mlstm (u,B,H,d,d)
+            return P(None, b_ax, None, None, None)
+        if name in ("n", "m", "c") and len(shape) >= 3:
+            return P(None, b_ax, *((None,) * (len(shape) - 2)))
+        return P(*((None,) * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)

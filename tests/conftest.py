@@ -1,0 +1,34 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on 1 CPU device by
+design (the 512-device setting belongs exclusively to repro.launch.dryrun)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_lm_cfg(**kw):
+    """A minimal dense config for algorithm tests (fast compiles)."""
+    from repro.configs import get_config
+    base = dict(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                vocab_size=64, max_seq_len=64)
+    base.update(kw)
+    return get_config("olmo-1b", smoke=True).replace(**base)
+
+
+def lm_batch(key, cfg, B, S, M=None):
+    shape = (M, B, S) if M else (B, S)
+    toks = jax.random.randint(key, shape, 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": toks}
+
+
+def maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))

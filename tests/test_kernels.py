@@ -1,0 +1,101 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps against the
+pure-jnp oracles in kernels/ref.py (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import (flash_attention_op, rmsnorm_op, zo_update_leaf,
+                               zo_update_tree)
+
+# ---------------------------------------------------------------------------
+# zo_update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(7,), (128,), (33, 65), (4, 16, 100),
+                                   (1024,), (2048, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_zo_update_matches_ref(shape, dtype):
+    key = jax.random.PRNGKey(hash(shape) % 2**31)
+    x = jax.random.normal(key, shape, dtype)
+    got = zo_update_leaf(x, 123, 0.37)
+    want = ref.zo_update_ref(x, 123, 0.37)
+    tol = 1e-6 if dtype == jnp.float32 else 0.05
+    assert got.dtype == x.dtype
+    assert float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                 - want.astype(jnp.float32)))) <= tol
+
+
+def test_zo_update_offset_consistency():
+    """Splitting an array into two row-offset calls must equal one call —
+    the counter stream is position-based, not call-based."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (2048,), jnp.float32)
+    whole = zo_update_leaf(x, 9, 1.0)
+    a = zo_update_leaf(x[:1024], 9, 1.0, row_offset=0)
+    b = zo_update_leaf(x[1024:], 9, 1.0, row_offset=1)
+    assert float(jnp.max(jnp.abs(whole - jnp.concatenate([a, b])))) < 1e-6
+
+
+def test_zo_update_tree_distinct_streams():
+    params = {"a": jnp.zeros((512,)), "b": jnp.zeros((512,))}
+    out = zo_update_tree(params, 5, 1.0)
+    assert float(jnp.max(jnp.abs(out["a"] - out["b"]))) > 0.1
+
+
+def test_counter_gauss_moments():
+    u = ref.counter_gauss(jnp.uint32(3), jnp.arange(200_000, dtype=jnp.uint32))
+    assert abs(float(u.mean())) < 0.02
+    assert abs(float(u.std()) - 1.0) < 0.02
+    # tail sanity: P(|u|>3) ~ 0.0027
+    frac = float(jnp.mean(jnp.abs(u) > 3.0))
+    assert 0.0005 < frac < 0.01
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 128), (2, 7, 256), (1, 512), (130, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(shape, dtype):
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, shape, dtype)
+    scale = jax.random.normal(jax.random.PRNGKey(2), (shape[-1],),
+                              jnp.float32)
+    got = rmsnorm_op(x, scale)
+    want = ref.rmsnorm_ref(x, scale)
+    assert float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                 - want.astype(jnp.float32)))) <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,d,H,Hkv", [(128, 64, 4, 4), (128, 64, 4, 2),
+                                       (256, 32, 2, 1)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 32), (False, 0)])
+def test_flash_attention_matches_ref(S, d, H, Hkv, causal, window):
+    key = jax.random.PRNGKey(3)
+    B = 2
+    q = jax.random.normal(key, (B, H, S, d), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(4), (B, Hkv, S, d), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(5), (B, Hkv, S, d), jnp.float32)
+    got = flash_attention_op(q, k, v, causal=causal, window=window,
+                             bq=64, bk=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    assert float(jnp.max(jnp.abs(got - want))) < 2e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    key = jax.random.PRNGKey(6)
+    q = jax.random.normal(key, (1, 2, 128, 64), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(7), (1, 2, 128, 64), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(8), (1, 2, 128, 64), dtype)
+    got = flash_attention_op(q, k, v, bq=64, bk=64)
+    want = ref.flash_attention_ref(q, k, v)
+    assert got.dtype == dtype
+    assert float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                 - want.astype(jnp.float32)))) < 0.05

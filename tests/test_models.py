@@ -1,0 +1,113 @@
+"""Model correctness: cut-point invariance, split/merge round-trips,
+prefill/decode vs full-forward logits consistency."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import maxdiff
+from repro.configs import get_config
+from repro.models import (client_forward, decode_step, init_params, logits_fn,
+                          loss_fn, merge_params, prefill, server_forward,
+                          split_params, forward_from_cut, untie_params)
+
+ARCHS_FAST = ["olmo-1b", "qwen3-14b", "xlstm-350m", "jamba-1.5-large-398b"]
+
+
+def _f32(arch):
+    return get_config(arch, smoke=True).replace(dtype="float32")
+
+
+def _batch(cfg, key, B=2, S=16):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    b = {"tokens": toks, "labels": toks}
+    if cfg.n_image_tokens:
+        b["image_embeds"] = jax.random.normal(
+            key, (B, cfg.n_image_tokens, cfg.d_model), jnp.float32)
+    if cfg.is_encoder_decoder:
+        b["frames"] = jax.random.normal(
+            key, (B, cfg.n_audio_frames, cfg.d_model), jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS_FAST)
+def test_cut_point_invariance(arch):
+    """The loss must be identical for every cut position (the split is a
+    pure re-partitioning of the same computation)."""
+    cfg = _f32(arch)
+    key = jax.random.PRNGKey(1)
+    params = untie_params(cfg, init_params(cfg, key))
+    batch = _batch(cfg, key)
+    n_cuts = cfg.n_encoder_layers if cfg.is_encoder_decoder else cfg.n_units
+    losses = [float(forward_from_cut(cfg, params, batch, c))
+              for c in range(1, n_cuts + 1)]
+    for l in losses[1:]:
+        assert abs(l - losses[0]) < 1e-4, losses
+
+
+@pytest.mark.parametrize("arch", ARCHS_FAST + ["whisper-tiny"])
+def test_split_merge_roundtrip(arch):
+    cfg = _f32(arch)
+    key = jax.random.PRNGKey(2)
+    params = untie_params(cfg, init_params(cfg, key))
+    cp, sp = split_params(cfg, params, cfg.default_cut_units)
+    merged = merge_params(cfg, cp, sp)
+    assert jax.tree.structure(merged) == jax.tree.structure(params)
+    assert maxdiff(merged, params) == 0.0
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "mixtral-8x22b", "qwen3-14b",
+                                  "mistral-nemo-12b", "xlstm-350m",
+                                  "jamba-1.5-large-398b",
+                                  "llama-3.2-vision-90b"])
+def test_prefill_decode_matches_full_forward(arch):
+    """prefill(S) then decode(S) must reproduce the full-forward logits at
+    positions S-1 and S (exact in f32 up to accumulation order)."""
+    cfg = _f32(arch)
+    if cfg.moe is not None:   # capacity dropping is not causal; lift capacity
+        import dataclasses
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  capacity_factor=16.0))
+    key = jax.random.PRNGKey(3)
+    params = init_params(cfg, key)
+    B, S = 2, 16
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    batch = _batch(cfg, key, B, S)
+    batch["tokens"] = toks[:, :S]
+    lg_pre, cache = prefill(cfg, params, batch, cache_len=S + 4)
+    lg_dec, _ = decode_step(cfg, params, toks[:, S:S + 1], cache, S)
+    full = dict(batch)
+    full["tokens"] = toks
+    lg_full = logits_fn(cfg, params, full)
+    assert float(jnp.max(jnp.abs(lg_pre[:, 0] - lg_full[:, S - 1]))) < 1e-3
+    assert float(jnp.max(jnp.abs(lg_dec[:, 0] - lg_full[:, S]))) < 1e-3
+
+
+def test_sliding_window_ring_buffer():
+    """Decode past the window: ring cache must equal full-context SWA."""
+    cfg = _f32("mixtral-8x22b")
+    import dataclasses
+    cfg = cfg.replace(sliding_window=8,
+                      moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    key = jax.random.PRNGKey(4)
+    params = init_params(cfg, key)
+    B, S = 1, 12
+    toks = jax.random.randint(key, (B, S + 4), 0, cfg.vocab_size)
+    lg, cache = prefill(cfg, params, {"tokens": toks[:, :S]},
+                        cache_len=S + 4)
+    for i in range(4):
+        lg, cache = decode_step(cfg, params, toks[:, S + i:S + i + 1], cache,
+                                S + i)
+    full = logits_fn(cfg, params, {"tokens": toks})
+    assert float(jnp.max(jnp.abs(lg[:, 0] - full[:, S + 3]))) < 1e-3
+
+
+def test_client_server_forward_compose():
+    cfg = _f32("olmo-1b")
+    key = jax.random.PRNGKey(5)
+    params = untie_params(cfg, init_params(cfg, key))
+    batch = _batch(cfg, key)
+    cp, sp = split_params(cfg, params, 2)
+    h = client_forward(cfg, cp, batch)
+    assert h["h"].shape == (2, 16, cfg.d_model)
+    loss = server_forward(cfg, sp, h, batch)
+    assert abs(float(loss) - float(loss_fn(cfg, params, batch))) < 1e-4

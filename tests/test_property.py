@@ -1,0 +1,84 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import straggler as strag
+from repro.core import theory, zo
+from repro.data.partition import dirichlet_partition
+from repro.kernels import ref
+from repro.kernels.ops import zo_update_leaf
+
+SET = dict(max_examples=20, deadline=None)
+
+
+@settings(**SET)
+@given(n=st.integers(8, 400), seed=st.integers(0, 2**31 - 1),
+       coeff=st.floats(-2.0, 2.0, allow_nan=False))
+def test_zo_update_kernel_equals_oracle(n, seed, coeff):
+    x = jnp.arange(n, dtype=jnp.float32) * 0.01
+    got = zo_update_leaf(x, seed, coeff)
+    want = ref.zo_update_ref(x, seed, coeff)
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-5
+
+
+@settings(**SET)
+@given(n_samples=st.integers(20, 300), n_clients=st.integers(2, 10),
+       alpha=st.floats(0.05, 10.0), seed=st.integers(0, 1000))
+def test_dirichlet_partition_invariants(n_samples, n_clients, alpha, seed):
+    labels = np.arange(n_samples) % 7
+    parts = dirichlet_partition(labels, n_clients, alpha, seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n_samples                    # covering
+    assert len(np.unique(allidx)) == n_samples         # disjoint
+    assert all(len(p) >= 1 for p in parts)             # non-empty
+
+
+@settings(**SET)
+@given(t_straggler=st.floats(0.5, 100.0), t_server=st.floats(0.01, 5.0),
+       T0=st.integers(10, 10000))
+def test_eq12_straggler_independence(t_straggler, t_server, T0):
+    """Paper Eq. 12: with τ = t_straggler/t_server, total time becomes
+    T0·t_server — independent of the straggler delay."""
+    tau = max(t_straggler / t_server, 1.0)
+    T1 = T0 / tau
+    total = T1 * t_straggler
+    assert abs(total - min(T0 * t_server,
+                           T0 * t_straggler)) / total < 1e-6
+
+
+@settings(**SET)
+@given(d=st.integers(1000, 10**9), tau=st.integers(1, 64),
+       M=st.integers(1, 64))
+def test_rate_improves_with_tau_and_M(d, tau, M):
+    r_base = theory.mu_splitfed_rate(1.0, 1.0, 1000, 1, 1, d, 1.0, 1.0, 1.0)
+    r_tau = theory.mu_splitfed_rate(1.0, 1.0, 1000, tau, M, d, 1.0, 1.0, 1.0)
+    assert r_tau <= r_base + 1e-9
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.1, 4.0))
+def test_delay_model_nonnegative_and_deadline(seed, scale):
+    rng = np.random.default_rng(seed)
+    dm = strag.DelayModel(base=1.0, scale=scale)
+    delays = dm.sample(rng, 8, 3)
+    assert (delays >= 1.0).all()
+    mask = strag.deadline_mask(delays[0], deadline=1.5)
+    assert mask.sum() >= 1                              # never drop everyone
+    assert ((delays[0] <= 1.5) | (mask == 0) | (mask == 1)).all()
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 1000), shape=st.sampled_from(
+    [(3, 5), (17,), (2, 2, 9)]))
+def test_perturb_replay_closure(seed, shape):
+    """perturb(+λ) then apply_update(2λ·...) composition: x - c·u must be
+    recoverable from the record alone."""
+    key = jax.random.PRNGKey(seed)
+    params = {"w": jax.random.normal(key, shape)}
+    rec_key = jax.random.fold_in(key, 1)
+    up = zo.apply_update(params, rec_key, 0.25)
+    manual = jax.tree.map(
+        lambda p, u: p - 0.25 * u, params, zo.tree_noise(rec_key, params))
+    assert float(jnp.max(jnp.abs(up["w"] - manual["w"]))) == 0.0

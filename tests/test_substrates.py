@@ -1,0 +1,201 @@
+"""Substrate tests: checkpointing (atomic/async/elastic), data loaders,
+optimizers, LoRA, straggler simulator, theory calculators."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import lm_batch, maxdiff, tiny_lm_cfg
+from repro.ckpt import Checkpointer, latest_step, restore_params, save_params
+from repro.core import straggler as strag
+from repro.core import theory
+from repro.data import FederatedLoader, SyntheticLM, dirichlet_partition
+from repro.data.synthetic import SyntheticSentiment
+from repro.models import init_params
+from repro.optim import (adamw_init, adamw_update, make_optimizer,
+                         cosine, linear_warmup)
+from repro.optim.lora import apply_lora, init_lora, lora_param_count
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_ckpt_roundtrip_bf16_exact():
+    cfg = tiny_lm_cfg()          # bf16 params
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as d:
+        save_params(d, 7, params)
+        restored, meta = restore_params(d, params)
+        assert meta["step"] == 7
+        assert maxdiff(params, restored) == 0.0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            assert a.dtype == b.dtype
+
+
+def test_ckpt_async_keep_k_and_latest():
+    params = {"w": jnp.arange(10.0)}
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, jax.tree.map(lambda x: x * s, params))
+        ck.wait()
+        assert latest_step(d) == 4
+        steps = sorted(int(x.split("_")[1]) for x in os.listdir(d)
+                       if x.startswith("step_"))
+        assert steps == [3, 4]
+        restored, _ = ck.restore(params)
+        assert float(restored["w"][1]) == 4.0
+
+
+def test_ckpt_atomicity_no_partial_dirs():
+    params = {"w": jnp.zeros((1000, 100))}
+    with tempfile.TemporaryDirectory() as d:
+        save_params(d, 1, params)
+        leftover = [x for x in os.listdir(d) if x.startswith("tmp.")]
+        assert leftover == []
+
+
+def test_ckpt_elastic_restore_new_sharding():
+    """Restore onto a different layout (here: explicit single-device
+    sharding) — the elastic-resharding path."""
+    params = {"w": jnp.arange(64.0).reshape(8, 8)}
+    with tempfile.TemporaryDirectory() as d:
+        save_params(d, 0, params)
+        sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+        restored, _ = restore_params(d, params,
+                                     shardings={"w": sh})
+        assert maxdiff(params, restored) == 0.0
+        assert restored["w"].sharding == sh
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_loader_restart_stable():
+    ds = SyntheticLM(vocab_size=64, seq_len=16, seed=3)
+    parts = dirichlet_partition(np.arange(100) % 5, 4, 0.5, seed=1)
+    l1 = FederatedLoader(ds, parts, batch_per_client=2, seed=9)
+    l2 = FederatedLoader(ds, parts, batch_per_client=2, seed=9)
+    b1, b2 = l1.round_batch(13), l2.round_batch(13)
+    assert np.array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    b3 = l1.round_batch(14)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+
+
+def test_synthetic_lm_learnable_structure():
+    ds = SyntheticLM(vocab_size=64, seq_len=256, seed=0)
+    s = ds.sample(0)
+    # bigram structure: successors are constrained -> repeated bigrams
+    pairs = set(zip(s[:-1].tolist(), s[1:].tolist()))
+    assert len(pairs) < 0.9 * (len(s) - 1)
+
+
+def test_sentiment_labels_verbalized():
+    ds = SyntheticSentiment(vocab_size=128, seq_len=32, seed=0)
+    b = ds.batch(np.arange(8))
+    last = b["tokens"][:, -1]
+    assert ((last == 126) | (last == 127)).all()
+    assert (b["labels"][:, -2] == b["tokens"][:, -1]).all()
+
+
+# ---------------------------------------------------------------------------
+# optim / lora
+# ---------------------------------------------------------------------------
+
+def test_adamw_descends():
+    params = {"w": jnp.full((32,), 5.0)}
+    grad_fn = jax.grad(lambda p: jnp.sum(jnp.square(p["w"])))
+    st = adamw_init(params)
+    p = params
+    for _ in range(100):
+        p, st = adamw_update(p, grad_fn(p), st, lr=0.1)
+    assert float(jnp.sum(jnp.square(p["w"]))) < 1.0
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adam"])
+def test_optimizer_factory(name):
+    init, update = make_optimizer(name)
+    params = {"w": jnp.ones((4,))}
+    st = init(params)
+    p, st = update(params, {"w": jnp.ones((4,))}, st, 0.1)
+    assert float(p["w"][0]) < 1.0
+
+
+def test_schedules():
+    f = linear_warmup(1.0, 10)
+    assert float(f(0)) < float(f(9)) <= 1.0
+    g = cosine(1.0, 5, 100)
+    assert float(g(99)) < float(g(10))
+
+
+def test_lora_only_adapters_change_effective_weights():
+    cfg = tiny_lm_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    lora = init_lora(cfg, params, rank=2, key=jax.random.PRNGKey(1))
+    assert lora_param_count(lora) > 0
+    eff = apply_lora(params, lora)         # B=0 -> identity at init
+    assert maxdiff(eff, params) == 0.0
+    lora2 = jax.tree.map(lambda x: x + 0.1, lora)
+    eff2 = apply_lora(params, lora2)
+    assert maxdiff(eff2, params) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# straggler model / theory
+# ---------------------------------------------------------------------------
+
+def test_tau_planner():
+    assert strag.plan_tau(10.0, 1.0) == 10
+    assert strag.plan_tau(0.5, 1.0) == 1
+    assert strag.plan_tau(1e9, 1.0, tau_max=64) == 64
+
+
+def test_mu_splitfed_round_time_overlap():
+    """Server τ steps overlap client compute: round time = max(...)."""
+    ct = np.array([1.0, 5.0])
+    m = np.ones(2, np.float32)
+    assert strag.round_time_mu_splitfed(ct, m, t_server=1.0, tau=3) == 5.0
+    assert strag.round_time_mu_splitfed(ct, m, t_server=2.0, tau=4) == 8.0
+    assert strag.round_time_vanilla(ct, m, t_server=1.0) == 6.0
+
+
+def test_simulated_speedup_under_stragglers():
+    """End-to-end Eq. 12: τ-planned MU-SplitFed total time ≈ T0·t_server,
+    beating vanilla's T0·t_straggler."""
+    rng = np.random.default_rng(0)
+    delays = strag.DelayModel(base=1.0, scale=3.0).sample(rng, 8, 200)
+    masks = np.ones_like(delays, np.float32)
+    t_server = 0.25
+    t_strag = float(delays.max(1).mean())
+    tau = strag.plan_tau(t_strag, t_server)
+    T0 = 200
+    t_vanilla = strag.simulate_total_time("vanilla", delays, masks, t_server,
+                                          1, rounds_needed=T0)
+    t_mu = strag.simulate_total_time("mu_splitfed", delays, masks, t_server,
+                                     tau, rounds_needed=max(T0 // tau, 1))
+    assert t_mu < 0.5 * t_vanilla
+
+
+def test_theory_bound_terms_positive_and_rate_matches():
+    b = theory.mu_splitfed_bound(F0=1.0, L=1.0, T=100, tau=4, M=8,
+                                 d_c=100, d_s=10_000, sigma_c=1.0,
+                                 sigma_s=1.0, eps_het=1.0, lam=1e-4)
+    assert all(v > 0 for k, v in b.items() if k not in ("eta", "eta_g"))
+    r1 = theory.mu_splitfed_rate(1, 1, 100, 1, 8, 10_100, 1, 1, 1)
+    r4 = theory.mu_splitfed_rate(1, 1, 100, 4, 8, 10_100, 1, 1, 1)
+    assert r4 < r1
+
+
+def test_comm_complexity_table2():
+    d, tau, M, K, eps = 10**6, 8, 10, 5, 0.1
+    c1 = theory.comm_complexity("mu_splitfed_tau1", d, tau, M, K, eps)
+    ct = theory.comm_complexity("mu_splitfed", d, tau, M, K, eps)
+    cd = theory.comm_complexity("mu_splitfed_tau_to_d", d, tau, M, K, eps)
+    assert ct == pytest.approx(c1 / tau)      # linear reduction in tau
+    assert cd == pytest.approx(c1 / d)        # dimension-free limit

