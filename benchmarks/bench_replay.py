@@ -1,0 +1,106 @@
+"""Microbenchmark: sequential vs fused batched seed-replay (ladder v3→v4).
+
+Replays N records (the N = M·τ·P of one seed-replay aggregation) into a
+synthetic parameter tree through both engines:
+
+  scan   zo.replay_updates        — lax.scan, one full parameter-sized HBM
+                                    read+write sweep PER RECORD;
+  fused  zo.fused_replay_updates  — all N counter-gaussian contributions
+                                    accumulated per leaf before x is
+                                    touched: one sweep total.
+
+Reports wall time and HBM traffic per record, both analytic
+(read+write = 2·4·d bytes per sweep) and as measured on the lowered HLO by
+launch/hlo_analysis (which expands while-loop trip counts — the same
+analysis the perf ladder uses).
+
+    PYTHONPATH=src python -m benchmarks.bench_replay --d 1048576 --n 32
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import zo
+from repro.launch.hlo_analysis import analyze_compiled
+
+
+def make_tree(d: int, key):
+    """A few unevenly-shaped f32 leaves totalling ~d elements."""
+    sizes = [d // 2, d // 4, d // 8, d - d // 2 - d // 4 - d // 8]
+    ks = jax.random.split(key, len(sizes))
+    return {f"w{i}": jax.random.normal(k, (max(s, 1),), jnp.float32)
+            for i, (s, k) in enumerate(zip(sizes, ks))}
+
+
+def timed(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)                  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3  # ms
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d", type=int, default=1 << 20,
+                    help="total parameter elements")
+    ap.add_argument("--n", type=int, default=32,
+                    help="records to replay (M·τ·P of one aggregation)")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    key = jax.random.PRNGKey(0)
+    params = make_tree(args.d, key)
+    d = sum(x.size for x in jax.tree.leaves(params))
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(args.n))
+    coeffs = jnp.asarray(
+        (np.random.default_rng(0).normal(size=args.n) * 1e-3
+         ).astype(np.float32))
+
+    scan_fn = jax.jit(lambda p, k, c: zo.replay_updates(p, k, c, "counter"))
+    fused_fn = jax.jit(
+        lambda p, k, c: zo.fused_replay_updates(p, k, c, "counter"))
+
+    # correctness gate before timing
+    diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree.leaves(scan_fn(params, keys, coeffs)),
+        jax.tree.leaves(fused_fn(params, keys, coeffs))))
+    assert diff <= 1e-5, f"fused/scan diverge: {diff}"
+
+    rows = {}
+    sweep_bytes = 2 * 4 * d                       # one f32 read+write sweep
+    for name, fn, sweeps in (("scan_v3", scan_fn, args.n),
+                             ("fused_v4", fused_fn, 1)):
+        hlo = analyze_compiled(fn.lower(params, keys, coeffs).compile())
+        rows[name] = {
+            "wall_ms": round(timed(fn, params, keys, coeffs,
+                                   reps=args.reps), 3),
+            "analytic_hbm_bytes_per_record": sweep_bytes * sweeps / args.n,
+            "hlo_hbm_bytes_per_record": hlo["expanded_hbm_bytes"] / args.n,
+        }
+    fused_hlo = rows["fused_v4"]["hlo_hbm_bytes_per_record"]
+    report = {"d": d, "n_records": args.n, "max_abs_diff": diff,
+              "per_path": rows,
+              "hbm_reduction_analytic": args.n,   # scan sweeps N×, fused 1×
+              # the HLO parser skips call-wrapped fusion interiors, so tiny
+              # programs can report 0 fused bytes — guard the ratio
+              "hbm_reduction_hlo": (
+                  rows["scan_v3"]["hlo_hbm_bytes_per_record"] / fused_hlo
+                  if fused_hlo > 0 else None)}
+    print(json.dumps(report, indent=1))
+    if args.out:
+        json.dump(report, open(args.out, "w"), indent=1)
+    return report
+
+
+if __name__ == "__main__":
+    main()

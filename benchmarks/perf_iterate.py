@@ -8,10 +8,16 @@ Variants (cumulative ladder):
   v0  paper-faithful baseline      (recorded in dryrun_*.json, pre-ladder)
   v1  + f32-accum CE dot + banded SWA (exact-math rewrites, always on now)
   v2  + counter-based ZO noise     (murmur3+Box-Muller; = TPU kernel stream)
-  v3  + seed-replay aggregation    (O(Mτ) scalars across the slow axis)
+  v3  + seed-replay aggregation    (O(Mτ) scalars across the slow axis;
+                                    records applied via an N-step scan —
+                                    N = Mτ P full parameter HBM sweeps)
+  v4  + fused batched replay       (zo.fused_replay_updates: all N record
+                                    contributions accumulated per leaf in
+                                    one pass — one HBM read + one write per
+                                    parameter regardless of N)
 
     PYTHONPATH=src python -m benchmarks.perf_iterate \
-        --arch qwen3-14b --shape train_4k --variant v3 [--multi-pod]
+        --arch qwen3-14b --shape train_4k --variant v4 [--multi-pod]
 """
 import argparse
 import dataclasses
@@ -34,13 +40,17 @@ def run_variant(arch: str, shape_name: str, variant: str,
     cfg = get_config(arch)
     sfl = default_sfl(cfg, tau=tau)
     aggregation = "dense"
+    replay = "scan"
     if variant >= "v2" and shape.kind == "train":
         sfl = dataclasses.replace(sfl, perturbation_dist="counter")
     if variant >= "v3" and shape.kind == "train":
         aggregation = "seed_replay"
+    if variant >= "v4" and shape.kind == "train":
+        replay = "fused"
     t0 = time.time()
     cell = build_cell(arch, shape, mesh, sfl=sfl if shape.kind == "train"
-                      else None, aggregation=aggregation, tau=tau)
+                      else None, aggregation=aggregation, replay=replay,
+                      tau=tau)
     compiled = lower_cell(cell).compile()
     a = analyze_compiled(compiled)
     t_c = a["expanded_dot_flops"] / PEAK_FLOPS

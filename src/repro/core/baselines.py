@@ -64,11 +64,20 @@ def gas_init_state(cfg: ModelConfig, sfl: SFLConfig, params: Params, batches):
 
 def gas_round(cfg: ModelConfig, sfl: SFLConfig, params: Params, state: GasState,
               batches, fresh_mask, round_key, *,
-              aggregation: str = "dense") -> Tuple[Params, GasState, RoundMetrics]:
+              aggregation: str = "dense",
+              replay: str = "auto") -> Tuple[Params, GasState, RoundMetrics]:
     """fresh_mask (M,) f32: 1 = client delivered this round; 0 = straggler,
     server trains its replica from the buffered stale activation instead.
     Fresh clients also get the scalar ZO backprop; stale ones don't update
-    their client side this round (they never received δ_c in time)."""
+    their client side this round (they never received δ_c in time).
+
+    aggregation='seed_replay' replays each client's server (key, coeff)
+    records (and the client-side (ukey, ccoeff)) into the global halves via
+    zo.fused_replay_updates instead of averaging dense replicas — the same
+    compressed wire format as mu_splitfed_round."""
+    if aggregation not in ("dense", "seed_replay"):
+        raise ValueError(f"gas_round: unsupported aggregation "
+                         f"{aggregation!r} (want 'dense' or 'seed_replay')")
     M = sfl.n_clients
     xc, xs = split_params(cfg, params, sfl.cut_units)
     mkeys = jax.vmap(lambda i: jax.random.fold_in(round_key, i))(jnp.arange(M))
@@ -89,25 +98,33 @@ def gas_round(cfg: ModelConfig, sfl: SFLConfig, params: Params, state: GasState,
 
         def loss_of(sp):
             return server_forward(cfg, sp, h, b_used)
-        sp_new, delta, _ = zo.spsa_step(loss_of, xs, skey, sfl.zo_eps,
-                                        sfl.lr_server, sfl.n_perturbations,
-                                        sfl.perturbation_dist)
+        sp_new, delta, (skeys, scoeffs) = zo.spsa_step(
+            loss_of, xs, skey, sfl.zo_eps, sfl.lr_server,
+            sfl.n_perturbations, sfl.perturbation_dist, replay=replay)
         delta_c = (server_forward(cfg, sp_new, hp, b_new)
                    - server_forward(cfg, sp_new, hm, b_new)).astype(jnp.float32)
         ccoeff = fresh * sfl.lr_client * delta_c / (2.0 * sfl.zo_eps)
         return {"xs_final": sp_new, "h": h, "b": b_used, "ukey": ukey,
-                "ccoeff": ccoeff, "loss0": loss0, "delta": delta}
+                "ccoeff": ccoeff, "loss0": loss0, "delta": delta,
+                "skeys": skeys, "scoeffs": scoeffs}
 
     out = jax.vmap(per_client)(batches, state.label_buffer, state.h_buffer,
                                mkeys, fresh_mask)
     w = jnp.full((M,), 1.0 / M, jnp.float32)
 
-    def agg(g, stacked):
-        d = jnp.tensordot(w, (stacked - g[None]).astype(jnp.float32), axes=1)
-        return (g + sfl.lr_global * d).astype(g.dtype)
-    xs_new = jax.tree.map(agg, xs, out["xs_final"])
-    xc_new = zo.replay_updates(xc, out["ukey"], sfl.lr_global * w * out["ccoeff"],
-                               sfl.perturbation_dist)
+    if aggregation == "dense":
+        def agg(g, stacked):
+            d = jnp.tensordot(w, (stacked - g[None]).astype(jnp.float32),
+                              axes=1)
+            return (g + sfl.lr_global * d).astype(g.dtype)
+        xs_new = jax.tree.map(agg, xs, out["xs_final"])
+    else:  # seed_replay: flatten the (M, P) server records, weight by η_g·w_m
+        xs_new = zo.replay_weighted_records(
+            xs, out["skeys"], out["scoeffs"], sfl.lr_global * w,
+            sfl.perturbation_dist, impl=replay)
+    xc_new = zo.replay_weighted_records(
+        xc, out["ukey"], out["ccoeff"], sfl.lr_global * w,
+        sfl.perturbation_dist, impl=replay)
     new_state = GasState(h_buffer=out["h"], label_buffer=out["b"])
     metrics = RoundMetrics(loss=out["loss0"],
                            server_deltas=out["delta"][:, None],

@@ -22,7 +22,11 @@ Aggregation modes:
   'seed_replay'  beyond-paper: replay the (key, δ)-records of every client
                  directly into the global params — only O(Mτ P) scalars
                  cross the aggregation axis (paper Appendix A realized as a
-                 collective-compression scheme).
+                 collective-compression scheme). The records are applied
+                 through zo.fused_replay_updates: with dist='counter' all
+                 N = Mτ P contributions are accumulated in one parameter
+                 sweep (ladder v4) instead of an N-step scan (``replay``
+                 selects the path; 'scan' keeps the v3 behaviour).
 
 The round function is pure/jit-able; straggler wall-clock simulation and
 participation decisions live outside (core/straggler.py) and enter here only
@@ -30,6 +34,7 @@ through ``active_mask``.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
@@ -65,7 +70,7 @@ def _client_messages(cfg: ModelConfig, sfl: SFLConfig, xc: Params, batch,
 
 
 def _server_tau_steps(cfg: ModelConfig, sfl: SFLConfig, xs: Params, h, batch,
-                      skey):
+                      skey, replay: str = "auto"):
     """τ unbalanced ZO steps on the stale embedding h. Returns
     (xs_final, deltas (τ,), records (keys (τ,P), coeffs (τ,P)))."""
     def loss_of(sp):
@@ -75,7 +80,7 @@ def _server_tau_steps(cfg: ModelConfig, sfl: SFLConfig, xs: Params, h, batch,
         k_i = jax.random.fold_in(skey, i)
         sp, mean_delta, (pkeys, coeffs) = zo.spsa_step(
             loss_of, sp, k_i, sfl.zo_eps, sfl.lr_server,
-            sfl.n_perturbations, sfl.perturbation_dist)
+            sfl.n_perturbations, sfl.perturbation_dist, replay=replay)
         return sp, (mean_delta, pkeys, coeffs)
 
     xs_f, (deltas, keys, coeffs) = jax.lax.scan(step, xs,
@@ -84,14 +89,16 @@ def _server_tau_steps(cfg: ModelConfig, sfl: SFLConfig, xs: Params, h, batch,
 
 
 def _client_round(cfg: ModelConfig, sfl: SFLConfig, xc: Params, xs: Params,
-                  batch, mkey, eval_loss: bool = True):
+                  batch, mkey, eval_loss: bool = True,
+                  replay: str = "auto"):
     """Full per-client round. Returns per-client results."""
     ukey = jax.random.fold_in(mkey, 0)
     skey = jax.random.fold_in(mkey, 1)
     h, hp, hm = _client_messages(cfg, sfl, xc, batch, ukey)
     loss0 = (server_forward(cfg, xs, h, batch) if eval_loss
              else jnp.zeros((), jnp.float32))          # round-start metric
-    xs_f, deltas, records = _server_tau_steps(cfg, sfl, xs, h, batch, skey)
+    xs_f, deltas, records = _server_tau_steps(cfg, sfl, xs, h, batch, skey,
+                                              replay)
     # ZO backprop (Eq. 6): scalar from the *final* server model
     delta_c = (server_forward(cfg, xs_f, hp, batch)
                - server_forward(cfg, xs_f, hm, batch)).astype(jnp.float32)
@@ -114,11 +121,14 @@ def mu_splitfed_round(cfg: ModelConfig, sfl: SFLConfig, params: Params,
                       batches, active_mask, round_key, *,
                       client_mode: str = "parallel",
                       aggregation: str = "dense",
+                      replay: str = "auto",
                       eval_loss: bool = True
                       ) -> Tuple[Params, RoundMetrics]:
     """One global round. ``batches`` leaves have leading M dim;
     ``active_mask`` is (M,) f32 participation weights (0 = straggler dropped /
-    not sampled). Returns (new_params, metrics)."""
+    not sampled). ``replay`` ('auto'|'fused'|'scan') selects how replayable
+    records are applied — see zo.fused_replay_updates. Returns
+    (new_params, metrics)."""
     M = sfl.n_clients
     xc, xs = split_params(cfg, params, sfl.cut_units)
     mkeys = jax.vmap(lambda i: jax.random.fold_in(round_key, i))(jnp.arange(M))
@@ -127,7 +137,8 @@ def mu_splitfed_round(cfg: ModelConfig, sfl: SFLConfig, params: Params,
 
     if client_mode == "parallel":
         out = jax.vmap(lambda b, k: _client_round(cfg, sfl, xc, xs, b, k,
-                                                  eval_loss))(batches, mkeys)
+                                                  eval_loss, replay)
+                       )(batches, mkeys)
         if aggregation == "dense":
             # Eq. 7: x_s' = x_s + η_g Σ w_m (x_{s,m}^τ − x_s)
             def agg(g, stacked):
@@ -136,15 +147,14 @@ def mu_splitfed_round(cfg: ModelConfig, sfl: SFLConfig, params: Params,
                 return (g + sfl.lr_global * delta).astype(g.dtype)
             xs_new = jax.tree.map(agg, xs, out["xs_final"])
         else:  # seed_replay: flatten (M, τ, P) records, weight by η_g·w_m
-            keys = out["srv_keys"].reshape((-1,) + out["srv_keys"].shape[3:])
-            coeffs = (out["srv_coeffs"]
-                      * (sfl.lr_global * w)[:, None, None]).reshape(-1)
-            xs_new = zo.replay_updates(xs, keys, coeffs, sfl.perturbation_dist)
+            xs_new = zo.replay_weighted_records(
+                xs, out["srv_keys"], out["srv_coeffs"], sfl.lr_global * w,
+                sfl.perturbation_dist, impl=replay)
     elif client_mode == "sequential":
         def body(carry, xs_in):
             acc = carry
             b, k, wm = xs_in
-            r = _client_round(cfg, sfl, xc, xs, b, k, eval_loss)
+            r = _client_round(cfg, sfl, xc, xs, b, k, eval_loss, replay)
             if aggregation == "dense":
                 acc = jax.tree.map(
                     lambda a, f, g: a + wm * (f - g).astype(jnp.float32),
@@ -160,18 +170,17 @@ def mu_splitfed_round(cfg: ModelConfig, sfl: SFLConfig, params: Params,
             xs_new = jax.tree.map(
                 lambda g, a: (g + sfl.lr_global * a).astype(g.dtype), xs, acc)
         else:
-            keys = out["srv_keys"].reshape((-1,) + out["srv_keys"].shape[3:])
-            coeffs = (out["srv_coeffs"]
-                      * (sfl.lr_global * w)[:, None, None]).reshape(-1)
-            xs_new = zo.replay_updates(xs, keys, coeffs, sfl.perturbation_dist)
+            xs_new = zo.replay_weighted_records(
+                xs, out["srv_keys"], out["srv_coeffs"], sfl.lr_global * w,
+                sfl.perturbation_dist, impl=replay)
     else:
         raise ValueError(client_mode)
 
     # client aggregation — always replayable (Eq. 7 left): the per-client
     # update is rank-one in u_m, so Σ_m w_m Δ_m is Σ of replayed records.
-    ckeys = out["ukey"]
-    ccoeffs = sfl.lr_global * w * out["ccoeff"]
-    xc_new = zo.replay_updates(xc, ckeys, ccoeffs, sfl.perturbation_dist)
+    xc_new = zo.replay_weighted_records(
+        xc, out["ukey"], out["ccoeff"], sfl.lr_global * w,
+        sfl.perturbation_dist, impl=replay)
 
     metrics = RoundMetrics(loss=out["loss0"], server_deltas=out["deltas"],
                            client_delta=out["ccoeff"])
@@ -181,15 +190,8 @@ def mu_splitfed_round(cfg: ModelConfig, sfl: SFLConfig, params: Params,
 def mu_split_round(cfg: ModelConfig, sfl: SFLConfig, params: Params, batch,
                    round_key) -> Tuple[Params, RoundMetrics]:
     """MU-Split: the single-client (M=1, SL) special case of Sec. 4.1."""
-    sfl1 = sfl if sfl.n_clients == 1 else sfl.replace_n_clients(1)
+    sfl1 = (sfl if sfl.n_clients == 1
+            else dataclasses.replace(sfl, n_clients=1))
     batches = jax.tree.map(lambda a: a[None], batch)
     return mu_splitfed_round(cfg, sfl1, params, batches,
                              jnp.ones((1,), jnp.float32), round_key)
-
-
-def _replace_n_clients(self: SFLConfig, n: int) -> SFLConfig:
-    import dataclasses
-    return dataclasses.replace(self, n_clients=n)
-
-
-SFLConfig.replace_n_clients = _replace_n_clients  # type: ignore[attr-defined]

@@ -11,6 +11,28 @@ pure function of a PRNG key, so
     regenerates u on the fly. This is the "dimension-free communication" of
     paper Appendix A, and our compressed-aggregation wire format.
 
+Replaying a BATCH of N records has two implementations:
+
+  * ``replay_updates``        sequential lax.scan — N full parameter-sized
+                              HBM read+write sweeps (ladder v3; the only
+                              option for threefry gaussian/sphere noise);
+  * ``fused_replay_updates``  one-pass batched replay for dist='counter'
+                              (ladder v4): per leaf, all N counter-gaussian
+                              contributions are regenerated and accumulated
+                              locally (in VMEM by the Pallas zo_replay
+                              kernel on TPU, via kernels/ref.py elsewhere)
+                              before x is touched — one HBM read + one
+                              write per leaf regardless of N. This is what
+                              makes seed-replay aggregation O(1) parameter
+                              sweeps instead of O(Mτ P).
+
+The counter noise stream is layout-unified with the kernels: element with
+row-major linear index n in leaf i draws from
+``counter_gauss2(base ^ i·φ, n // 1024, n % 1024)`` — identical for
+tree_noise, the Pallas kernels, and the ref oracles, so a record written
+by the engine replays through the kernels on bit-identical noise (summed
+results agree up to f32 accumulation order).
+
 All helpers are pytree-generic: they work on client halves, server halves,
 or full models.
 """
@@ -42,6 +64,23 @@ def _leaf_keys(key, params: Params):
     return jax.tree.unflatten(treedef, keys)
 
 
+_LEAF_SALT = 0x9E3779B9          # golden-ratio leaf decorrelation constant
+
+
+def record_seeds(keys) -> jax.Array:
+    """uint32 counter seed(s) from PRNG key(s): first ^ last key word.
+    Accepts one key (shape (2,)) or a batch ((N, 2) / any leading dims);
+    the scalar form is the per-record ``base`` of tree_noise('counter')."""
+    raw = jnp.asarray(keys, jnp.uint32)
+    return (raw[..., 0] ^ raw[..., -1]).astype(jnp.uint32)
+
+
+def _leaf_seed(base, leaf_idx: int):
+    """Per-leaf counter seed — shared by tree_noise('counter') and
+    fused_replay_updates so both draw the identical stream."""
+    return base ^ jnp.uint32((leaf_idx * _LEAF_SALT) & 0xFFFFFFFF)
+
+
 def tree_noise(key, params: Params, dist: str = "gaussian") -> Params:
     """u with the same structure/shapes as params (f32 leaves).
 
@@ -55,29 +94,31 @@ def tree_noise(key, params: Params, dist: str = "gaussian") -> Params:
         √d·S^{d-1}); needs a global norm, hence two passes.
     """
     if dist == "counter":
-        # Sharding-friendly: the (row, col) counters are built from
-        # leaf-SHAPED iotas (row = flattened leading dims, col = last dim),
-        # so the whole generator is elementwise in the leaf's layout and
-        # GSPMD partitions it exactly like the parameter it perturbs — no
-        # reshapes, no gathers (the v2 lesson in EXPERIMENTS.md §Perf).
-        from repro.kernels.ref import counter_gauss2
+        # Sharding-friendly: the (hi, lo) counters are built from
+        # leaf-SHAPED iotas (hi/lo = row-major linear index split at the
+        # kernel LANE), so the whole generator is elementwise in the leaf's
+        # layout and GSPMD partitions it exactly like the parameter it
+        # perturbs — no reshapes, no gathers (the v2 lesson in
+        # EXPERIMENTS.md §Perf). The split at LANE=1024 makes the stream
+        # identical to the (row, lane) layout of the Pallas zo_update /
+        # zo_replay kernels and the kernels/ref.py oracles, which is what
+        # lets fused_replay_updates replay engine-generated records.
+        from repro.kernels.ref import LANE, counter_gauss2
         leaves, treedef = jax.tree.flatten(params)
-        base = (jnp.asarray(key).reshape(-1)[0]
-                ^ jnp.asarray(key).reshape(-1)[-1]).astype(jnp.uint32)
+        base = record_seeds(jnp.asarray(key).reshape(-1))
         out = []
         for i, leaf in enumerate(leaves):
-            seed = base ^ jnp.uint32((i * 0x9E3779B9) & 0xFFFFFFFF)
+            seed = _leaf_seed(base, i)
             shape = leaf.shape if leaf.ndim > 0 else (1,)
-            # row = linear index over all-but-last dims; col = last dim
-            row = jnp.zeros(shape, jnp.uint32)
+            # row-major linear element index, built elementwise
+            lin = jnp.zeros(shape, jnp.uint32)
             mult = 1
-            for d in range(len(shape) - 2, -1, -1):
-                row = row + jax.lax.broadcasted_iota(jnp.uint32, shape, d) \
+            for d in range(len(shape) - 1, -1, -1):
+                lin = lin + jax.lax.broadcasted_iota(jnp.uint32, shape, d) \
                     * jnp.uint32(mult)
                 mult *= shape[d]
-            col = jax.lax.broadcasted_iota(jnp.uint32, shape,
-                                           len(shape) - 1)
-            u = counter_gauss2(seed, row, col)
+            u = counter_gauss2(seed, lin // jnp.uint32(LANE),
+                               lin % jnp.uint32(LANE))
             out.append(u.reshape(leaf.shape))
         return jax.tree.unflatten(treedef, out)
     ks = _leaf_keys(key, params)
@@ -103,12 +144,67 @@ def apply_update(params: Params, key, coeff, dist: str = "gaussian") -> Params:
 
 def replay_updates(params: Params, keys, coeffs, dist: str = "gaussian") -> Params:
     """Apply a batch of records sequentially (order-independent: updates are
-    additive once the coeffs are fixed). keys: (N,) key array; coeffs: (N,)."""
+    additive once the coeffs are fixed). keys: (N,) key array; coeffs: (N,).
+
+    Each scan step regenerates a full parameter-sized noise tree and does a
+    full HBM read+write of params — N sweeps total. Prefer
+    ``fused_replay_updates`` (one sweep) whenever dist='counter'."""
     def body(p, rec):
         k, c = rec
         return apply_update(p, k, c, dist), None
     out, _ = jax.lax.scan(body, params, (keys, coeffs))
     return out
+
+
+def fused_replay_updates(params: Params, keys, coeffs,
+                         dist: str = "gaussian",
+                         impl: str = "auto") -> Params:
+    """One-pass batched replay of N UpdateRecords: x − Σᵢ cᵢ·u(keyᵢ).
+
+    The seed-replay aggregation hot path (perf-ladder v4). For
+    dist='counter', each leaf's N counter-gaussian contributions are
+    regenerated and accumulated locally — in VMEM by the Pallas
+    ``zo_replay_flat`` kernel on TPU, by the ``kernels/ref.py`` oracle
+    elsewhere — before the leaf is touched: one HBM read + one write per
+    leaf regardless of N, versus the N full parameter sweeps of the
+    ``replay_updates`` scan. Equivalent to that scan up to f32 summation
+    order (≤1e-5; see tests/test_replay.py).
+
+    dist='gaussian'/'sphere' (threefry noise, not counter-replayable) fall
+    back to the sequential scan. impl: 'auto' | 'fused' | 'scan' — 'scan'
+    forces the sequential path (the v3 rung / equivalence baseline);
+    'fused' asserts the one-pass path (counter only).
+    """
+    if impl == "scan" or (impl == "auto" and dist != "counter"):
+        return replay_updates(params, keys, coeffs, dist)
+    if dist != "counter":
+        raise ValueError(
+            f"fused replay requires dist='counter', got {dist!r}")
+    from repro.kernels.ops import zo_replay_leaf
+    seeds = record_seeds(keys)                       # (N,) uint32
+    neg_coeffs = -jnp.asarray(coeffs, jnp.float32).reshape(-1)
+    leaves, treedef = jax.tree.flatten(params)
+    out = [zo_replay_leaf(leaf, _leaf_seed(seeds, i), neg_coeffs)
+           for i, leaf in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def replay_weighted_records(params: Params, keys, coeffs, weights,
+                            dist: str = "gaussian",
+                            impl: str = "auto") -> Params:
+    """Replay per-client record stacks with aggregation weights — the
+    shared wire-format apply of every seed-replay aggregation site.
+
+    keys: (M, ..., 2) stacked record keys; coeffs: (M, ...) matching
+    scalars; weights: (M,) aggregation weights (e.g. η_g·w_m). Flattens to
+    N = M·(...) records with coeff cᵢ·w_m and applies them through
+    fused_replay_updates."""
+    coeffs = jnp.asarray(coeffs, jnp.float32)
+    w = jnp.asarray(weights, jnp.float32).reshape(
+        (-1,) + (1,) * (coeffs.ndim - 1))
+    flat_keys = keys.reshape((-1,) + keys.shape[-1:])
+    return fused_replay_updates(params, flat_keys, (coeffs * w).reshape(-1),
+                                dist, impl=impl)
 
 
 # ---------------------------------------------------------------------------
@@ -125,11 +221,13 @@ def spsa_delta(loss_of: Callable[[Params], jax.Array], params: Params, key,
 
 def spsa_step(loss_of: Callable[[Params], jax.Array], params: Params, key,
               eps: float, lr, n_perturbations: int = 1,
-              dist: str = "gaussian") -> Tuple[Params, jax.Array, Tuple]:
+              dist: str = "gaussian",
+              replay: str = "auto") -> Tuple[Params, jax.Array, Tuple]:
     """One ZO-SGD step with P-perturbation averaging.
 
     Returns (new_params, mean_delta, records) where records = (keys, coeffs)
-    are the replayable wire format (P entries).
+    are the replayable wire format (P entries). ``replay`` selects the
+    record-application path (see fused_replay_updates).
     """
     P = n_perturbations
     pkeys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(P))
@@ -141,7 +239,8 @@ def spsa_step(loss_of: Callable[[Params], jax.Array], params: Params, key,
 
     deltas = jax.lax.fori_loop(0, P, one, jnp.zeros((P,), jnp.float32))
     coeffs = lr * deltas / (2.0 * eps * P)
-    new_params = replay_updates(params, pkeys, coeffs, dist)
+    new_params = fused_replay_updates(params, pkeys, coeffs, dist,
+                                      impl=replay)
     return new_params, jnp.mean(deltas), (pkeys, coeffs)
 
 

@@ -16,13 +16,25 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 def make_client_batches(dataset, client_indices: List[np.ndarray],
                         round_idx: int, batch_per_client: int,
                         seed: int = 0) -> Dict[str, np.ndarray]:
-    """Stack per-client batches -> leaves with leading M dim."""
+    """Stack per-client batches -> leaves with leading M dim.
+
+    A client whose index pool is empty (possible when a sparse Dirichlet
+    partition is built without the min_per_client rebalance) samples from
+    the union of all clients' pools instead of crashing in rng.choice(0);
+    if every pool is empty there is no data at all and we raise."""
+    nonempty = [np.asarray(p) for p in client_indices if len(p)]
+    if not nonempty:
+        raise ValueError("make_client_batches: all client index pools are "
+                         "empty — no data to sample")
+    global_pool = (np.concatenate(nonempty) if len(nonempty) <
+                   len(client_indices) else None)
     outs = []
     for m, idx_pool in enumerate(client_indices):
         rng = np.random.default_rng((seed, round_idx, m))
-        take = rng.choice(len(idx_pool), size=batch_per_client,
-                          replace=len(idx_pool) < batch_per_client)
-        outs.append(dataset.batch(idx_pool[take]))
+        pool = np.asarray(idx_pool) if len(idx_pool) else global_pool
+        take = rng.choice(len(pool), size=batch_per_client,
+                          replace=len(pool) < batch_per_client)
+        outs.append(dataset.batch(pool[take]))
     return {k: np.stack([o[k] for o in outs]) for k in outs[0]}
 
 

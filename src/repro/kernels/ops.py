@@ -14,9 +14,11 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.rmsnorm import rmsnorm
-from repro.kernels.zo_update import LANE, zo_update_flat
+from repro.kernels.zo_update import (BLOCK_ROWS, LANE, zo_replay_flat,
+                                     zo_update_flat)
 
 
 def on_tpu() -> bool:
@@ -44,24 +46,62 @@ def zo_update_leaf(x: jnp.ndarray, seed, coeff, *, row_offset: int = 0,
     return out.reshape(-1)[:n].reshape(x.shape)
 
 
+# per-leaf seed decorrelation — MUST stay in sync with zo._LEAF_SALT so a
+# record written by the engine (zo.tree_noise dist='counter') replays here
+# on the identical stream
+_LEAF_SALT = 0x9E3779B9
+
+
 def zo_update_tree(params: Any, seed, coeff, *, interpret=None) -> Any:
-    """Fused seed-replay update over a whole pytree. Each leaf gets a
-    disjoint counter ROW range (stable in tree structure; 2^32 rows × 1024
-    lanes of stream space — enough for multi-trillion-parameter trees)."""
+    """Fused seed-replay update over a whole pytree. Leaf i draws from its
+    own salted seed (seed ^ i·φ) at row offset 0 — the exact stream of
+    zo.tree_noise(dist='counter'), so ``zo_update_tree(p,
+    zo.record_seeds(key), -c)`` equals ``zo.apply_update(p, key, c,
+    'counter')``."""
     leaves, treedef = jax.tree.flatten(params)
     out = []
-    row = 0
-    for leaf in leaves:
-        rows = -(-leaf.size // LANE)
-        out.append(zo_update_leaf(leaf, seed, coeff, row_offset=row,
+    for i, leaf in enumerate(leaves):
+        leaf_seed = (jnp.asarray(seed, jnp.uint32)
+                     ^ jnp.uint32((i * _LEAF_SALT) & 0xFFFFFFFF))
+        out.append(zo_update_leaf(leaf, leaf_seed, coeff,
                                   interpret=interpret))
-        row += rows
     return jax.tree.unflatten(treedef, out)
 
 
 def zo_perturb_tree(params: Any, seed, eps, *, interpret=None) -> Any:
     """x + eps·u — the perturbation side of SPSA (same noise stream)."""
     return zo_update_tree(params, seed, eps, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# batched seed replay (perf-ladder v4 hot path)
+# ---------------------------------------------------------------------------
+
+def zo_replay_leaf(x: jnp.ndarray, seeds, coeffs, *, row_offset: int = 0,
+                   impl: str = "auto", interpret=None) -> jnp.ndarray:
+    """y = x + Σᵢ coeffs[i]·u(seeds[i]) for an arbitrary-shaped leaf —
+    one read + one write of x regardless of N.
+
+    impl='auto' picks the compiled Pallas kernel on TPU and the pure-JAX
+    reference elsewhere (an interpret-mode Pallas sweep over N records is
+    needlessly slow on CPU); 'pallas'/'ref' force a backend for the
+    equivalence tests."""
+    if impl == "auto":
+        impl = "pallas" if on_tpu() else "ref"
+    if impl == "ref":
+        return _ref.zo_replay_ref(x, seeds, coeffs, row_offset=row_offset)
+    assert impl == "pallas", impl
+    interpret = _auto_interpret(interpret)
+    n = x.size
+    rows = -(-n // LANE)
+    # pad the row count to a whole number of grid blocks (the extra rows
+    # draw unused counter noise and are sliced off below)
+    block = min(BLOCK_ROWS, rows)
+    rows = -(-rows // block) * block
+    flat = jnp.pad(x.reshape(-1), (0, rows * LANE - n)).reshape(rows, LANE)
+    out = zo_replay_flat(flat, seeds, coeffs, offset=row_offset,
+                         interpret=interpret)
+    return out.reshape(-1)[:n].reshape(x.shape)
 
 
 # ---------------------------------------------------------------------------

@@ -74,6 +74,42 @@ def zo_update_ref(x: jnp.ndarray, seed, coeff, row_offset: int = 0
             ).astype(x.dtype)
 
 
+# unrolled-accumulation cutoff: below it the N noise regenerations fuse into
+# one elementwise XLA fusion (one read of x, one write of y); above it a
+# lax.scan bounds code size while still touching x only once.
+_REPLAY_UNROLL = 128
+
+
+def zo_replay_ref(x: jnp.ndarray, seeds, coeffs, row_offset: int = 0
+                  ) -> jnp.ndarray:
+    """Batched-replay oracle: y = x + Σᵢ coeffs[i]·u(seeds[i]).
+
+    Matches zo_replay_flat (and N sequential zo_update_ref applications up
+    to f32 summation order): the Σ cᵢ·uᵢ accumulator is built elementwise
+    BEFORE x is touched, so the parameter leaf is read and written exactly
+    once regardless of N."""
+    seeds = jnp.asarray(seeds, jnp.uint32).reshape(-1)
+    coeffs = jnp.asarray(coeffs, jnp.float32).reshape(-1)
+    n_el = x.size
+    rows = -(-n_el // LANE)
+    hi = ((jnp.arange(rows, dtype=jnp.uint32) + jnp.uint32(row_offset))
+          [:, None] + jnp.zeros((rows, LANE), jnp.uint32))
+    lo = jnp.broadcast_to(jnp.arange(LANE, dtype=jnp.uint32)[None, :],
+                          (rows, LANE))
+    if seeds.shape[0] <= _REPLAY_UNROLL:
+        acc = jnp.zeros((rows, LANE), jnp.float32)
+        for i in range(seeds.shape[0]):
+            acc = acc + coeffs[i] * counter_gauss2(seeds[i], hi, lo)
+    else:
+        def body(acc, sc):
+            s, c = sc
+            return acc + c * counter_gauss2(s, hi, lo), None
+        acc, _ = jax.lax.scan(body, jnp.zeros((rows, LANE), jnp.float32),
+                              (seeds, coeffs))
+    acc = acc.reshape(-1)[:n_el].reshape(x.shape)
+    return (x.astype(jnp.float32) + acc).astype(x.dtype)
+
+
 # ---------------------------------------------------------------------------
 # rmsnorm oracle
 # ---------------------------------------------------------------------------

@@ -96,12 +96,13 @@ def default_sfl(cfg: ModelConfig, n_clients: int = 16, tau: int = 2) -> SFLConfi
 
 def build_cell(arch: str, shape: ShapeConfig, mesh, *, smoke: bool = False,
                sfl: Optional[SFLConfig] = None, aggregation: str = "dense",
-               tau: int = 2, eval_loss: bool = False) -> Cell:
+               replay: str = "auto", tau: int = 2,
+               eval_loss: bool = False) -> Cell:
     cfg = get_config(arch, smoke=smoke)
     multi_pod = "pod" in mesh.axis_names
     mesh_cfg = MeshConfig(shape=tuple(mesh.devices.shape),
                           axes=tuple(mesh.axis_names))
-    plan = plan_for(cfg, shape, mesh_cfg, aggregation)
+    plan = plan_for(cfg, shape, mesh_cfg, aggregation, replay)
     rep = NamedSharding(mesh, P())
     name = f"{arch}×{shape.name}×{'x'.join(map(str, mesh_cfg.shape))}"
 
@@ -120,7 +121,7 @@ def build_cell(arch: str, shape: ShapeConfig, mesh, *, smoke: bool = False,
             new_params, metrics = mu_splitfed_round(
                 cfg, sfl, params, batches, active, k,
                 client_mode=plan.client_mode, aggregation=plan.aggregation,
-                eval_loss=eval_loss)
+                replay=plan.replay, eval_loss=eval_loss)
             return new_params, metrics.loss
 
         return Cell(name, fn, (pshapes, batch, mask, key),

@@ -44,6 +44,11 @@ def main(argv=None):
     ap.add_argument("--participation", type=float, default=1.0)
     ap.add_argument("--straggler-scale", type=float, default=0.0)
     ap.add_argument("--deadline", type=float, default=0.0)
+    ap.add_argument("--t-server", type=float, default=0.1,
+                    help="simulated server step time (s) for the wall-clock "
+                         "model")
+    ap.add_argument("--t-gen", type=float, default=0.0,
+                    help="GAS activation-generation overhead (s) per round")
     ap.add_argument("--aggregation", default="dense",
                     choices=["dense", "seed_replay"])
     ap.add_argument("--client-mode", default="parallel",
@@ -111,15 +116,24 @@ def main(argv=None):
                 gas_state = gas_init_state(cfg, sfl, params, batch)
             params, gas_state, metrics = gas_round(
                 cfg, sfl, params, gas_state, batch,
-                jnp.asarray(mask), rkey)
+                jnp.asarray(mask), rkey, aggregation=args.aggregation)
         else:
             params, metrics = round_fn(params, batch, jnp.asarray(mask),
                                        rkey)
         loss = float(jnp.sum(metrics.loss * mask) / max(mask.sum(), 1))
-        sim_t = wall.tick(strag.round_time_mu_splitfed(
-            delays, mask, t_server=0.1, tau=sfl.tau)
-            if args.algorithm == "mu_splitfed" else
-            strag.round_time_vanilla(delays, mask, t_server=0.1))
+        # per-algorithm wall-clock model (straggler.py): each algorithm has
+        # its own overlap structure, so each must be charged its own time
+        if args.algorithm == "gas":
+            dt = strag.round_time_gas(delays, mask, t_server=args.t_server,
+                                      t_gen=args.t_gen)
+        elif args.algorithm == "vanilla":
+            dt = strag.round_time_vanilla(delays, mask,
+                                          t_server=args.t_server)
+        else:
+            dt = strag.round_time_mu_splitfed(delays, mask,
+                                              t_server=args.t_server,
+                                              tau=sfl.tau)
+        sim_t = wall.tick(dt)
         print(f"round {r:4d}  loss {loss:.4f}  active {int(mask.sum())}/"
               f"{args.clients}  wall {time.time()-t0:.1f}s  sim_t {sim_t:.1f}")
         if ck is not None and (r + 1) % args.ckpt_every == 0:

@@ -30,6 +30,7 @@ class Plan:
     client_mode: str                  # parallel | sequential
     aggregation: str                  # dense | seed_replay
     tp_bytes_per_chip: int            # estimate backing the decision
+    replay: str = "auto"              # auto | fused | scan (record apply)
 
     @property
     def fsdp_axes(self):
@@ -44,7 +45,7 @@ def model_bytes(cfg: ModelConfig) -> int:
 
 
 def plan_for(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
-             aggregation: str = "dense") -> Plan:
+             aggregation: str = "dense", replay: str = "auto") -> Plan:
     tp = mesh.shape[-1]
     tp_bytes = model_bytes(cfg) // tp
     multi_pod = len(mesh.shape) == 3
@@ -52,8 +53,8 @@ def plan_for(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
         # serving: weights always fit TP-sharded except the giants -> FSDP
         fsdp = None if tp_bytes <= FSDP_BUDGET else (
             ("pod", "data") if multi_pod else ("data",))
-        return Plan(fsdp, "parallel", aggregation, tp_bytes)
+        return Plan(fsdp, "parallel", aggregation, tp_bytes, replay)
     if tp_bytes <= PARALLEL_BUDGET:
-        return Plan(None, "parallel", aggregation, tp_bytes)
+        return Plan(None, "parallel", aggregation, tp_bytes, replay)
     fsdp = ("pod", "data") if multi_pod else ("data",)
-    return Plan(fsdp, "sequential", aggregation, tp_bytes)
+    return Plan(fsdp, "sequential", aggregation, tp_bytes, replay)

@@ -88,6 +88,21 @@ def test_loader_restart_stable():
                               np.asarray(b3["tokens"]))
 
 
+def test_make_client_batches_empty_pool_falls_back():
+    """Regression: a client left with no indices (sparse Dirichlet draw)
+    must sample from the global pool instead of crashing rng.choice(0)."""
+    from repro.data import make_client_batches
+    ds = SyntheticLM(vocab_size=64, seq_len=16, seed=3)
+    parts = [np.arange(10), np.array([], np.int64), np.arange(10, 20)]
+    b = make_client_batches(ds, parts, round_idx=0, batch_per_client=2)
+    assert b["tokens"].shape[:2] == (3, 2)
+    # deterministic in (seed, round, client) like every other pool
+    b2 = make_client_batches(ds, parts, round_idx=0, batch_per_client=2)
+    assert np.array_equal(b["tokens"], b2["tokens"])
+    with pytest.raises(ValueError, match="empty"):
+        make_client_batches(ds, [np.array([], np.int64)], 0, 2)
+
+
 def test_synthetic_lm_learnable_structure():
     ds = SyntheticLM(vocab_size=64, seq_len=256, seed=0)
     s = ds.sample(0)
