@@ -1,0 +1,108 @@
+"""Per-round host overhead: legacy python loop vs the engine's fused
+multi-round scan (perf ladder v5).
+
+Both paths run the SAME algorithm round body (engine adapters) over the
+SAME precomputed schedule and keys; the only difference is orchestration —
+one jit dispatch + host sync per round (python) vs one per chunk of C
+rounds (scan, donated params). The equivalence gate asserts the two loss
+trajectories agree to <=1e-5 before any number is reported; rows land in
+perf_iterations.json as rung v5.
+
+    PYTHONPATH=src python -m benchmarks.bench_rounds \
+        [--rounds 32] [--chunk 8] [--algorithm mu_splitfed]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import batch_fn_for, make_setup
+from repro.configs import SFLConfig
+from repro.core import engine
+from repro.core import straggler as strag
+
+
+def run_once(algo, cfg, sfl, params, batch_fn, sched, key, *, rounds, mode,
+             chunk):
+    t0 = time.perf_counter()
+    res = engine.run_rounds(algo, cfg, sfl, params, batch_fn, sched, key,
+                            rounds=rounds, mode=mode, chunk_size=chunk)
+    jax.block_until_ready(res.params)
+    return res, time.perf_counter() - t0
+
+
+def run(rounds=32, chunk=8, M=4, tau=2, algorithm="mu_splitfed", seed=0,
+        reps=3, layers=2, seq=16, batch=1):
+    # deliberately small round body: this bench isolates the HOST overhead
+    # (dispatch + sync + un-donated copies) that the fused scan removes —
+    # at production model sizes that overhead is the same absolute ms but
+    # hidden under compute
+    cfg, params, ds, parts, key = make_setup(M=M, seed=seed, seq=seq,
+                                             layers=layers)
+    sfl = SFLConfig(n_clients=M, tau=tau, cut_units=1, lr_server=5e-3,
+                    lr_client=1e-3, lr_global=1.0)
+    sched = strag.make_schedule(seed, rounds, M, straggler_scale=2.0,
+                                participation=0.5)
+    batch_fn = batch_fn_for(ds, parts, batch, seed)
+    # one shared adapter instance: the engine caches its jitted round/chunk
+    # executables on it, so the timed second run pays zero compilation
+    algo = engine.get_algorithm(algorithm)
+
+    out = {}
+    for mode in ("python", "scan"):
+        # warmup run compiles every chunk shape; the timed runs measure
+        # steady-state dispatch + host-sync overhead only (best of `reps`,
+        # the usual guard against shared-machine noise)
+        run_once(algo, cfg, sfl, params, batch_fn, sched, key,
+                 rounds=rounds, mode=mode, chunk=chunk)
+        best = None
+        for _ in range(reps):
+            res, dt = run_once(algo, cfg, sfl, params, batch_fn, sched, key,
+                               rounds=rounds, mode=mode, chunk=chunk)
+            best = dt if best is None else min(best, dt)
+        out[mode] = {"res": res, "total_s": best,
+                     "per_round_ms": best / rounds * 1e3}
+
+    # equivalence gate: the fused scan must reproduce the python loop's
+    # loss trajectory before its speed means anything
+    diff = float(np.max(np.abs(out["python"]["res"].round_loss
+                               - out["scan"]["res"].round_loss)))
+    assert diff <= 1e-5, f"scan != python trajectory (max diff {diff:.2e})"
+
+    return {
+        "variant": "v5", "bench": "bench_rounds", "algorithm": algorithm,
+        "arch": f"tiny({layers}L,d32,seq{seq})", "rounds": rounds,
+        "chunk": chunk, "tau": tau, "clients": M,
+        "per_round_ms_python": round(out["python"]["per_round_ms"], 3),
+        "per_round_ms_scan": round(out["scan"]["per_round_ms"], 3),
+        "speedup": round(out["python"]["per_round_ms"]
+                         / out["scan"]["per_round_ms"], 3),
+        "max_loss_traj_diff": diff,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=32)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--algorithm", default="mu_splitfed",
+                    choices=sorted(engine.ALGORITHMS))
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default="perf_iterations.json")
+    args = ap.parse_args(argv)
+    row = run(rounds=args.rounds, chunk=args.chunk, algorithm=args.algorithm,
+              reps=args.reps)
+    print(json.dumps(row, indent=1))
+    rows = json.load(open(args.out)) if os.path.exists(args.out) else []
+    rows.append(row)
+    json.dump(rows, open(args.out, "w"), indent=1)
+    return row
+
+
+if __name__ == "__main__":
+    main()

@@ -14,11 +14,11 @@ import time
 from typing import Dict, List
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import SFLConfig, get_config
-from repro.core.splitfed import mu_splitfed_round
+from repro.core import engine
+from repro.core import straggler as strag
 from repro.data import SyntheticLM, dirichlet_partition, make_client_batches
 from repro.models import init_params, untie_params
 
@@ -38,26 +38,23 @@ def make_setup(M=4, batch=2, seq=32, seed=0, vocab=64, layers=3):
     return cfg, params, ds, parts, key
 
 
+def batch_fn_for(ds, parts, batch, seed):
+    """Stateless round->host-batch closure for the engine."""
+    return lambda r: make_client_batches(ds, parts, r, batch, seed)
+
+
 def run_mu_splitfed(cfg, params, ds, parts, key, *, M, tau, cut, rounds,
                     batch=2, lr_server=5e-3, lr_client=1e-3, lr_global=1.0,
-                    participation=1.0, seed=0) -> List[float]:
-    """Returns the per-round mean client loss curve."""
+                    participation=1.0, seed=0, chunk_size=8) -> List[float]:
+    """Returns the per-round mean client loss curve (engine, fused scan)."""
     sfl = SFLConfig(n_clients=M, tau=tau, cut_units=cut,
                     lr_server=lr_server, lr_client=lr_client,
                     lr_global=lr_global)
-    rng = np.random.default_rng(seed)
-    round_fn = jax.jit(lambda p, b, m, k: mu_splitfed_round(
-        cfg, sfl, p, b, m, k))
-    losses = []
-    p = params
-    for r in range(rounds):
-        host = make_client_batches(ds, parts, r, batch, seed)
-        b = {k2: jnp.asarray(v) for k2, v in host.items()}
-        from repro.core.straggler import participation_mask
-        mask = jnp.asarray(participation_mask(rng, M, participation))
-        p, metrics = round_fn(p, b, mask, jax.random.fold_in(key, r))
-        losses.append(float((metrics.loss * mask).sum() / mask.sum()))
-    return losses
+    sched = strag.make_schedule(seed, rounds, M, participation=participation)
+    res = engine.run_rounds("mu_splitfed", cfg, sfl, params,
+                            batch_fn_for(ds, parts, batch, seed), sched, key,
+                            rounds=rounds, chunk_size=chunk_size)
+    return [float(x) for x in res.round_loss]
 
 
 def rounds_to_target(losses: List[float], target: float) -> int:

@@ -12,16 +12,12 @@ from __future__ import annotations
 import argparse
 import json
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import make_setup
+from benchmarks.common import batch_fn_for, make_setup
 from repro.configs import SFLConfig
+from repro.core import engine
 from repro.core import straggler as strag
-from repro.core.baselines import gas_init_state, gas_round
-from repro.core.splitfed import mu_splitfed_round
-from repro.data import make_client_batches
 
 T_SERVER = 0.25
 # GAS generates synthetic activations each round; the paper (§5) observes
@@ -32,46 +28,26 @@ T_GEN = 2.0
 
 def run(rounds=30, M=4, tau=4, scale=3.0, seed=0):
     cfg, params, ds, parts, key = make_setup(M=M, seed=seed)
-    rng = np.random.default_rng(seed)
-    delays = strag.DelayModel(base=1.0, scale=scale).sample(rng, M, rounds)
-    masks = np.ones((rounds, M), np.float32)
+    # one shared system-model trace: all three algorithms see the same
+    # delays; the default knobs give all-ones masks (full participation, no
+    # deadline — the Fig. 2 protocol) and GAS derives its freshness mask
+    # from the per-round median delay
+    sched = strag.make_schedule(seed, rounds, M, straggler_scale=scale,
+                                t_server=T_SERVER, t_gen=T_GEN)
+    batch_fn = batch_fn_for(ds, parts, 2, seed)
 
     curves = {}
     for algo in ("mu_splitfed", "vanilla", "gas"):
         sfl = SFLConfig(n_clients=M, tau=tau if algo == "mu_splitfed" else 1,
                         cut_units=1, lr_server=5e-3, lr_client=1e-3,
                         lr_global=1.0)
-        p = params
-        gas_state = None
-        wall, t = [], 0.0
-        losses = []
-        if algo == "gas":
-            step = jax.jit(lambda p_, s_, b_, f_, k_: gas_round(
-                cfg, sfl, p_, s_, b_, f_, k_))
-        else:
-            step = jax.jit(lambda p_, b_, m_, k_: mu_splitfed_round(
-                cfg, sfl, p_, b_, m_, k_))
-        for r in range(rounds):
-            host = make_client_batches(ds, parts, r, 2, seed)
-            b = {k2: jnp.asarray(v) for k2, v in host.items()}
-            mask = jnp.asarray(masks[r])
-            rk = jax.random.fold_in(key, r)
-            if algo == "gas":
-                if gas_state is None:
-                    gas_state = gas_init_state(cfg, sfl, p, b)
-                median = np.median(delays[r])
-                fresh = jnp.asarray((delays[r] <= median).astype(np.float32))
-                p, gas_state, metrics = step(p, gas_state, b, fresh, rk)
-                t += strag.round_time_gas(delays[r], masks[r], T_SERVER, T_GEN)
-            else:
-                p, metrics = step(p, b, mask, rk)
-                t += (strag.round_time_mu_splitfed(delays[r], masks[r],
-                                                   T_SERVER, sfl.tau)
-                      if algo == "mu_splitfed" else
-                      strag.round_time_vanilla(delays[r], masks[r], T_SERVER))
-            wall.append(t)
-            losses.append(float(metrics.loss.mean()))
-        curves[algo] = {"wall": wall, "loss": losses}
+        res = engine.run_rounds(algo, cfg, sfl, params, batch_fn, sched, key,
+                                rounds=rounds,
+                                **({"fresh": "median"} if algo == "gas"
+                                   else {}))
+        losses = [float(x) for x in res.metrics["loss"].mean(1)]
+        curves[algo] = {"wall": list(np.cumsum(res.round_times)),
+                        "loss": losses}
     return curves
 
 

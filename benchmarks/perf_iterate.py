@@ -15,9 +15,15 @@ Variants (cumulative ladder):
                                     contributions accumulated per leaf in
                                     one pass — one HBM read + one write per
                                     parameter regardless of N)
+  v5  + fused multi-round scan     (engine chunk: C global rounds in ONE
+                                    dispatch — lax.scan over rounds with
+                                    donated params, schedule rows as data;
+                                    host syncs once per chunk instead of
+                                    per round. Host-overhead numbers:
+                                    benchmarks/bench_rounds.py)
 
     PYTHONPATH=src python -m benchmarks.perf_iterate \
-        --arch qwen3-14b --shape train_4k --variant v4 [--multi-pod]
+        --arch qwen3-14b --shape train_4k --variant v5 [--multi-pod]
 """
 import argparse
 import dataclasses
@@ -27,14 +33,16 @@ import time
 from repro.configs import SHAPES_BY_NAME
 from repro.launch.hlo_analysis import analyze_compiled
 from repro.launch.mesh import make_production_mesh
-from repro.launch.steps import build_cell, default_sfl, lower_cell
+from repro.launch.steps import (build_cell, build_train_multi_cell,
+                                default_sfl, lower_cell)
 from repro.configs import get_config
 
 PEAK_FLOPS, HBM_BW, LINK_BW = 197e12, 819e9, 50e9
 
 
 def run_variant(arch: str, shape_name: str, variant: str,
-                multi_pod: bool = False, tau: int = 2) -> dict:
+                multi_pod: bool = False, tau: int = 2,
+                rounds_per_chunk: int = 4) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     shape = SHAPES_BY_NAME[shape_name]
     cfg = get_config(arch)
@@ -48,17 +56,32 @@ def run_variant(arch: str, shape_name: str, variant: str,
     if variant >= "v4" and shape.kind == "train":
         replay = "fused"
     t0 = time.time()
-    cell = build_cell(arch, shape, mesh, sfl=sfl if shape.kind == "train"
-                      else None, aggregation=aggregation, replay=replay,
-                      tau=tau)
+    if variant >= "v5" and shape.kind == "train":
+        cell = build_train_multi_cell(arch, shape, mesh, sfl=sfl,
+                                      rounds_per_chunk=rounds_per_chunk,
+                                      aggregation=aggregation, replay=replay,
+                                      tau=tau)
+    else:
+        cell = build_cell(arch, shape, mesh, sfl=sfl if shape.kind == "train"
+                          else None, aggregation=aggregation, replay=replay,
+                          tau=tau)
     compiled = lower_cell(cell).compile()
     a = analyze_compiled(compiled)
+    # v5 lowers C rounds per dispatch: normalize per ROUND so rows stay
+    # comparable across ladder rungs
+    per_round = (rounds_per_chunk if variant >= "v5"
+                 and shape.kind == "train" else 1)
+    for k in ("expanded_dot_flops", "expanded_hbm_bytes", "total_bytes"):
+        a[k] = a[k] / per_round
+    a["bytes_by_kind"] = {k: v / per_round
+                          for k, v in a["bytes_by_kind"].items()}
     t_c = a["expanded_dot_flops"] / PEAK_FLOPS
     t_m = a["expanded_hbm_bytes"] / 2.0 / HBM_BW
     t_x = a["total_bytes"] / LINK_BW
     mem = compiled.memory_analysis()
     return {
         "arch": arch, "shape": shape_name, "variant": variant,
+        "rounds_per_chunk": per_round,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
         "dominant": max((("compute", t_c), ("memory", t_m),

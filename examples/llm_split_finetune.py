@@ -16,8 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import SFLConfig, get_config
-from repro.core import theory
-from repro.core.splitfed import mu_splitfed_round
+from repro.core import engine, make_schedule, theory
 from repro.data.synthetic import SyntheticSentiment
 from repro.models import init_params, logits_fn, untie_params
 
@@ -47,20 +46,23 @@ def main():
         return ds.accuracy(np.asarray(logits[:, -2].astype(jnp.float32)),
                            b["class"])
 
-    round_fn = jax.jit(lambda p, b, m, k: mu_splitfed_round(
-        cfg, sfl, p, b, m, k))
-    mask = jnp.ones((args.clients,), jnp.float32)
-    print(f"initial label accuracy: {eval_acc(params):.2f}")
-    for r in range(args.rounds):
+    def batch_fn(r):
         rows = [ds.batch(np.arange(r * 64 + m * 16, r * 64 + m * 16 + 4))
                 for m in range(args.clients)]
-        batch = {k2: jnp.asarray(np.stack([x[k2] for x in rows]))
-                 for k2 in ("tokens", "labels")}
-        params, metrics = round_fn(params, batch, mask,
-                                   jax.random.fold_in(key, r))
-        if (r + 1) % 5 == 0:
-            print(f"round {r+1:3d}  loss {float(metrics.loss.mean()):.4f}  "
-                  f"label acc {eval_acc(params):.2f}")
+        return {k2: np.stack([x[k2] for x in rows])
+                for k2 in ("tokens", "labels")}
+
+    def on_chunk(info, p, s):
+        # evals land exactly on the chunk boundaries (every 5 rounds)
+        print(f"round {info.stop:3d}  loss "
+              f"{float(info.metrics['loss'].mean()):.4f}  "
+              f"label acc {eval_acc(p):.2f}")
+
+    sched = make_schedule(0, args.rounds, args.clients)
+    print(f"initial label accuracy: {eval_acc(params):.2f}")
+    engine.run_rounds("mu_splitfed", cfg, sfl, params, batch_fn, sched, key,
+                      rounds=args.rounds, chunk_size=5,
+                      chunk_callback=on_chunk)
 
 
 if __name__ == "__main__":

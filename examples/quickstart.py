@@ -1,13 +1,14 @@
-"""Quickstart: MU-SplitFed in ~40 lines on a tiny LM.
+"""Quickstart: MU-SplitFed in ~40 lines on a tiny LM, through the unified
+engine — the rounds run as ONE fused on-device scan per chunk, not a
+Python loop.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import SFLConfig, get_config
-from repro.core.splitfed import mu_splitfed_round
+from repro.core import engine, make_schedule
 from repro.data import SyntheticLM, dirichlet_partition, make_client_batches
 from repro.models import init_params, untie_params
 
@@ -23,13 +24,14 @@ params = untie_params(cfg, init_params(cfg, key))
 ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, seed=0)
 parts = dirichlet_partition(np.arange(256) % 8, sfl.n_clients, alpha=0.5)
 
-# 3. train: one jit'd global round per step — the server does τ ZO updates
-#    per client round on the stale embedding, clients update from a single
-#    returned scalar (Algorithm 1)
-round_fn = jax.jit(lambda p, b, m, k: mu_splitfed_round(cfg, sfl, p, b, m, k))
-mask = jnp.ones((sfl.n_clients,), jnp.float32)
-for r in range(10):
-    host = make_client_batches(ds, parts, r, batch_per_client=2, seed=0)
-    batch = {k2: jnp.asarray(v) for k2, v in host.items()}
-    params, metrics = round_fn(params, batch, mask, jax.random.fold_in(key, r))
-    print(f"round {r}: mean client loss {float(metrics.loss.mean()):.4f}")
+# 3. train: the engine precomputes the straggler/participation schedule as
+#    (R, M) data and scans Algorithm 1 over rounds on-device — the server
+#    does τ ZO updates per client round on the stale embedding, clients
+#    update from a single returned scalar
+sched = make_schedule(seed=0, n_rounds=10, n_clients=sfl.n_clients)
+result = engine.run_rounds(
+    "mu_splitfed", cfg, sfl, params,
+    lambda r: make_client_batches(ds, parts, r, batch_per_client=2, seed=0),
+    sched, key, rounds=10, chunk_size=5)
+for r, loss in enumerate(result.round_loss):
+    print(f"round {r}: mean client loss {loss:.4f}")

@@ -12,13 +12,12 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import Checkpointer, latest_step
 from repro.configs import SFLConfig, get_config
+from repro.core import engine
 from repro.core import straggler as strag
-from repro.core.splitfed import mu_splitfed_round
 from repro.data import FederatedLoader, SyntheticLM, dirichlet_partition
 from repro.models import init_params, param_count, untie_params
 
@@ -64,25 +63,26 @@ def main():
         start = meta["step"] + 1
         print(f"[resume] round {start}")
 
-    rng = np.random.default_rng(0)
-    dm = strag.DelayModel(base=1.0, scale=args.straggler_scale)
-    round_fn = jax.jit(lambda p, b, m, k: mu_splitfed_round(
-        cfg, sfl, p, b, m, k))
-    mask_all = jnp.ones((args.clients,), jnp.float32)
-    t0, sim_t = time.time(), 0.0
-    for r in range(start, args.rounds):
-        batch = loader.round_batch(r)
-        delays = dm.sample(rng, args.clients, 1)[0]
-        params, metrics = round_fn(params, batch, mask_all,
-                                   jax.random.fold_in(key, r))
-        sim_t += strag.round_time_mu_splitfed(delays, np.ones(args.clients),
-                                              t_server=0.1, tau=sfl.tau)
-        if r % 10 == 0 or r == args.rounds - 1:
-            print(f"round {r:4d}  loss {float(metrics.loss.mean()):.4f}  "
-                  f"wall {time.time()-t0:7.1f}s  sim {sim_t:8.1f}s")
-        if (r + 1) % 25 == 0:
-            ck.save(r, params, metadata={"loss": float(metrics.loss.mean())})
-    ck.save(args.rounds - 1, params, block=True)
+    # the full system model precomputed as data; the engine runs the rounds
+    # as fused on-device scans with checkpoints at chunk boundaries
+    sched = strag.make_schedule(0, args.rounds, args.clients,
+                                straggler_scale=args.straggler_scale,
+                                t_server=0.1)
+    t0 = time.time()
+    wall = strag.WallClock()
+
+    def on_chunk(info, p, s):
+        for i, r in enumerate(range(info.start, info.stop)):
+            wall.tick(info.round_times[i])
+            if r % 10 == 0 or r == args.rounds - 1:
+                print(f"round {r:4d}  loss "
+                      f"{float(info.metrics['loss'][i].mean()):.4f}"
+                      f"  wall {time.time()-t0:7.1f}s  sim {wall.t:8.1f}s")
+
+    engine.run_rounds("mu_splitfed", cfg, sfl, params, loader.round_batch,
+                      sched, key, rounds=args.rounds, start_round=start,
+                      chunk_size=5, checkpointer=ck, ckpt_every=25,
+                      chunk_callback=on_chunk)
     print("done.")
 
 

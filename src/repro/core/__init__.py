@@ -1,6 +1,10 @@
 """Paper core: MU-SplitFed (unbalanced-update split federated learning with
-zeroth-order optimization), its baselines, the straggler system model, and
-the convergence-theory calculators."""
-from repro.core import baselines, straggler, theory, zo
+zeroth-order optimization), its baselines, the straggler system model, the
+convergence-theory calculators, and the unified algorithm engine that runs
+any of them as a chunked on-device multi-round scan."""
+from repro.core import baselines, engine, straggler, theory, zo
+from repro.core.engine import (ALGORITHMS, Algorithm, ChunkInfo, EngineResult,
+                               get_algorithm, run_rounds)
 from repro.core.splitfed import (RoundMetrics, mu_split_round,
                                  mu_splitfed_round)
+from repro.core.straggler import Schedule, make_schedule

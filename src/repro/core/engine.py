@@ -1,0 +1,447 @@
+"""Unified algorithm engine: one driver, every algorithm, rounds fused
+on-device.
+
+The paper's headline claim is wall-clock (rounds over *time*), yet the
+historical drivers executed rounds one Python iteration at a time — each
+paying a dispatch, a host sync, and an un-donated parameter copy per round,
+and each hand-rolling its own loop + algorithm special cases. This module
+replaces all of them:
+
+  Algorithm    protocol (init_state / round_fn / time_model / metrics_spec)
+               with registered adapters for mu_splitfed, vanilla, gas,
+               fedavg, and fedlora — every algorithm is a pure
+               (params, state, batch, mask, key) -> (params, state, metrics)
+               round, so the driver is algorithm-agnostic (GAS state
+               threading included).
+  run_rounds   the driver. mode='scan' (default) lifts the loop into a
+               chunked, jit'd jax.lax.scan over rounds with params/state
+               DONATED across chunks: straggler delays, participation /
+               deadline masks (straggler.make_schedule) and per-round
+               fold-in keys are precomputed on host as stacked (R, M) /
+               (R, 2) arrays and scanned as data; metrics are stacked per
+               chunk and flushed to host only at chunk boundaries — which
+               is also where checkpointing hooks in. mode='python' keeps
+               the legacy one-jit-call-per-round loop as the equivalence
+               baseline (benchmarks/bench_rounds.py gates scan == python
+               on the loss trajectory; perf ladder rung v5).
+
+Chunk boundaries are aligned to ckpt_every, so a run killed after chunk k
+resumes from its checkpoint onto the *same* round boundaries — with
+stateless data order and precomputed schedules the resumed trajectory is
+bit-identical to an uninterrupted run (tests/test_engine.py).
+"""
+from __future__ import annotations
+
+from typing import (Any, Callable, Dict, NamedTuple, Optional, Protocol,
+                    Tuple, Union, runtime_checkable)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, SFLConfig
+from repro.core import straggler as strag
+from repro.core.baselines import (fedavg_round, fedlora_round, gas_init_state,
+                                  gas_round, vanilla_splitfed_round)
+from repro.core.splitfed import mu_splitfed_round
+
+Params = Any
+State = Any
+Batch = Dict[str, Any]
+MetricsDict = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# the Algorithm protocol + registry
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Algorithm(Protocol):
+    """One federated algorithm as the engine sees it.
+
+    round_fn must be pure/jit-able; all system effects (delays, staleness,
+    participation) enter as the (M,) mask data row. State is an arbitrary
+    pytree carried across rounds (empty tuple for stateless algorithms).
+    """
+    name: str
+
+    def init_state(self, cfg: ModelConfig, sfl: SFLConfig, params: Params,
+                   batch0: Batch) -> State: ...
+
+    def round_fn(self, cfg: ModelConfig, sfl: SFLConfig, params: Params,
+                 state: State, batch: Batch, mask: jax.Array, key: jax.Array
+                 ) -> Tuple[Params, State, MetricsDict]: ...
+
+    def time_model(self, delays: np.ndarray, mask: np.ndarray,
+                   sfl: SFLConfig, sched: strag.Schedule) -> float: ...
+
+    def metrics_spec(self, cfg: ModelConfig, sfl: SFLConfig
+                     ) -> Dict[str, Tuple[int, ...]]: ...
+
+
+ALGORITHMS: Dict[str, Callable[..., Algorithm]] = {}
+
+
+def register(cls):
+    ALGORITHMS[cls.name] = cls
+    return cls
+
+
+def get_algorithm(name: Union[str, Algorithm], **opts) -> Algorithm:
+    """Resolve an algorithm by registry name (instantiating it with
+    ``opts``) or pass a ready-made Algorithm instance through."""
+    if isinstance(name, str):
+        if name not in ALGORITHMS:
+            raise ValueError(f"unknown algorithm {name!r}; "
+                             f"registered: {sorted(ALGORITHMS)}")
+        return ALGORITHMS[name](**opts)
+    if opts:
+        raise ValueError("opts only apply when resolving by name")
+    return name
+
+
+class AlgorithmBase:
+    """Shared defaults: stateless, standard mask row, per-client loss."""
+
+    def init_state(self, cfg, sfl, params, batch0) -> State:
+        return ()
+
+    def round_mask(self, sched: strag.Schedule, r: int) -> np.ndarray:
+        """The (M,) mask row round r's round_fn consumes (GAS overrides
+        with its freshness rule)."""
+        return sched.masks[r % sched.n_rounds]
+
+    def metrics_spec(self, cfg, sfl) -> Dict[str, Tuple[int, ...]]:
+        return {"loss": (sfl.n_clients,)}
+
+
+@register
+class MuSplitFed(AlgorithmBase):
+    """The paper's τ-unbalanced split federated round (Algorithm 1)."""
+    name = "mu_splitfed"
+
+    def __init__(self, client_mode: str = "parallel",
+                 aggregation: str = "dense", replay: str = "auto",
+                 eval_loss: bool = True):
+        self.client_mode = client_mode
+        self.aggregation = aggregation
+        self.replay = replay
+        self.eval_loss = eval_loss
+
+    def round_fn(self, cfg, sfl, params, state, batch, mask, key):
+        params, m = mu_splitfed_round(
+            cfg, sfl, params, batch, mask, key, client_mode=self.client_mode,
+            aggregation=self.aggregation, replay=self.replay,
+            eval_loss=self.eval_loss)
+        return params, state, {"loss": m.loss, "server_deltas": m.server_deltas,
+                               "client_delta": m.client_delta}
+
+    def time_model(self, delays, mask, sfl, sched):
+        return strag.round_time_mu_splitfed(delays, mask, sched.t_server,
+                                            sfl.tau, sched.t_comm)
+
+    def metrics_spec(self, cfg, sfl):
+        M = sfl.n_clients
+        return {"loss": (M,), "server_deltas": (M, sfl.tau),
+                "client_delta": (M,)}
+
+
+@register
+class VanillaSplitFed(MuSplitFed):
+    """SplitFed without unbalanced updates — exactly MU-SplitFed at τ=1."""
+    name = "vanilla"
+
+    def round_fn(self, cfg, sfl, params, state, batch, mask, key):
+        params, m = vanilla_splitfed_round(
+            cfg, sfl, params, batch, mask, key, client_mode=self.client_mode,
+            aggregation=self.aggregation, replay=self.replay,
+            eval_loss=self.eval_loss)
+        return params, state, {"loss": m.loss, "server_deltas": m.server_deltas,
+                               "client_delta": m.client_delta}
+
+    def time_model(self, delays, mask, sfl, sched):
+        return strag.round_time_vanilla(delays, mask, sched.t_server,
+                                        sched.t_comm)
+
+    def metrics_spec(self, cfg, sfl):
+        return {"loss": (sfl.n_clients,), "server_deltas": (sfl.n_clients, 1),
+                "client_delta": (sfl.n_clients,)}
+
+
+@register
+class Gas(AlgorithmBase):
+    """GAS-like async SFL with a carried activation buffer. ``fresh``
+    selects where the freshness mask comes from: 'mask' (the schedule's
+    participation·deadline row — the training driver's convention) or
+    'median' (clients at/below the per-round median delay — Fig. 2)."""
+    name = "gas"
+
+    def __init__(self, aggregation: str = "dense", replay: str = "auto",
+                 fresh: str = "mask"):
+        if fresh not in ("mask", "median"):
+            raise ValueError(f"gas: fresh must be 'mask'|'median', "
+                             f"got {fresh!r}")
+        self.aggregation = aggregation
+        self.replay = replay
+        self.fresh = fresh
+
+    def init_state(self, cfg, sfl, params, batch0):
+        return gas_init_state(cfg, sfl, params, batch0)
+
+    def round_mask(self, sched, r):
+        i = r % sched.n_rounds
+        return (sched.fresh_median[i] if self.fresh == "median"
+                else sched.masks[i])
+
+    def round_fn(self, cfg, sfl, params, state, batch, mask, key):
+        params, state, m = gas_round(cfg, sfl, params, state, batch, mask,
+                                     key, aggregation=self.aggregation,
+                                     replay=self.replay)
+        return params, state, {"loss": m.loss, "server_deltas": m.server_deltas,
+                               "client_delta": m.client_delta}
+
+    def time_model(self, delays, mask, sfl, sched):
+        return strag.round_time_gas(delays, mask, sched.t_server, sched.t_gen,
+                                    sched.t_comm)
+
+    def metrics_spec(self, cfg, sfl):
+        return {"loss": (sfl.n_clients,), "server_deltas": (sfl.n_clients, 1),
+                "client_delta": (sfl.n_clients,)}
+
+
+@register
+class FedAvg(AlgorithmBase):
+    """First-order FedAvg (full model on every client, E local steps)."""
+    name = "fedavg"
+
+    def __init__(self, lr: Optional[float] = None, local_steps: int = 1,
+                 optimizer: str = "sgd"):
+        self.lr = lr
+        self.local_steps = local_steps
+        self.optimizer = optimizer
+
+    def round_fn(self, cfg, sfl, params, state, batch, mask, key):
+        from repro.models import loss_fn
+        first = (jax.tree.map(lambda a: a[:, 0], batch)
+                 if self.local_steps > 1 else batch)
+        loss0 = jax.vmap(lambda b: loss_fn(cfg, params, b))(first)
+        params = fedavg_round(cfg, params, batch, mask,
+                              self.lr if self.lr is not None else sfl.lr_client,
+                              self.local_steps, self.optimizer,
+                              eta_g=sfl.lr_global)
+        return params, state, {"loss": loss0.astype(jnp.float32)}
+
+    def time_model(self, delays, mask, sfl, sched):
+        return strag.round_time_local_only(delays, mask, sched.t_comm)
+
+
+@register
+class FedLora(FedAvg):
+    """FedAvg over LoRA adapters only; the base params never move — the
+    adapter tree is the engine state."""
+    name = "fedlora"
+
+    def __init__(self, rank: int = 4, alpha: float = 16.0,
+                 lr: Optional[float] = None):
+        super().__init__(lr=lr)
+        self.rank = rank
+        self.alpha = alpha
+
+    def init_state(self, cfg, sfl, params, batch0):
+        from repro.optim.lora import init_lora
+        return init_lora(cfg, params, self.rank,
+                         jax.random.PRNGKey(sfl.seed))
+
+    def round_fn(self, cfg, sfl, params, state, batch, mask, key):
+        from repro.models import loss_fn
+        from repro.optim.lora import apply_lora
+        merged = apply_lora(params, state, self.alpha)
+        loss0 = jax.vmap(lambda b: loss_fn(cfg, merged, b))(batch)
+        lora = fedlora_round(cfg, params, state, batch, mask,
+                             self.lr if self.lr is not None else sfl.lr_client,
+                             self.alpha, eta_g=sfl.lr_global)
+        return params, lora, {"loss": loss0.astype(jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# the fused multi-round driver
+# ---------------------------------------------------------------------------
+
+class EngineResult(NamedTuple):
+    params: Params
+    state: State
+    metrics: Dict[str, np.ndarray]  # per-round stacks, leading dim = rounds run
+    round_loss: np.ndarray          # (rounds,) mask-weighted mean client loss
+    round_times: np.ndarray         # (rounds,) simulated per-round wall-clock
+    sim_time: float                 # sum(round_times)
+
+
+class ChunkInfo(NamedTuple):
+    """Everything a chunk_callback needs about the rounds just flushed —
+    engine-computed, so drivers never re-derive losses/times/masks."""
+    start: int                      # first absolute round in the chunk
+    stop: int                       # one past the last round
+    metrics: Dict[str, np.ndarray]  # host-flushed stacks, leading dim C
+    masks: np.ndarray               # (C, M) the mask rows the rounds consumed
+    round_loss: np.ndarray          # (C,) mask-weighted mean client loss
+    round_times: np.ndarray         # (C,) simulated per-round wall-clock
+
+
+def fold_in_keys(key, start: int, n: int) -> jax.Array:
+    """(n, 2) stacked per-round keys: keys[i] = fold_in(key, start + i) —
+    identical to what the legacy loops derived one round at a time."""
+    return jax.vmap(lambda r: jax.random.fold_in(key, r))(
+        jnp.arange(start, start + n))
+
+
+def make_chunk_fn(algo: Algorithm, cfg: ModelConfig, sfl: SFLConfig):
+    """The fused multi-round step: scan algo.round_fn over a chunk of
+    precomputed (batches, masks, keys) rows. Shared with the perf-ladder
+    cell builder (launch/steps.py train_multi)."""
+    def run_chunk(params, state, batches, masks, keys):
+        def body(carry, xs):
+            p, s = carry
+            b, m, k = xs
+            p, s, met = algo.round_fn(cfg, sfl, p, s, b, m, k)
+            return (p, s), met
+        (params, state), mets = jax.lax.scan(body, (params, state),
+                                             (batches, masks, keys))
+        return params, state, mets
+    return run_chunk
+
+
+def _stack_chunk(batch_fn, r0: int, n: int):
+    """Stack n rounds of per-client batches -> leaves (n, M, ...). Host
+    (numpy) leaves stack on host then upload once; device leaves stack
+    on-device — batch_fn output must never bounce device->host->device."""
+    rounds = [batch_fn(r0 + i) for i in range(n)]
+
+    def stack(*xs):
+        if all(isinstance(x, np.ndarray) for x in xs):
+            return jnp.asarray(np.stack(xs))
+        return jnp.stack([jnp.asarray(x) for x in xs])
+
+    return jax.tree.map(stack, *rounds)
+
+
+def _copy_tree(tree):
+    # donation safety: the caller keeps its own params/state buffers
+    return jax.tree.map(lambda x: jnp.array(x, copy=True), tree)
+
+
+def _cached_jit(algo: Algorithm, mode: str, cfg: ModelConfig, sfl: SFLConfig,
+                build: Callable):
+    """Per-algorithm-instance jit cache: repeated run_rounds calls with the
+    same (algo, cfg, sfl) reuse the compiled executables instead of
+    re-tracing a fresh closure every call (jax.jit caches by function
+    identity, which a fresh lambda defeats)."""
+    cache = getattr(algo, "_engine_jit_cache", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(algo, "_engine_jit_cache", cache)
+    k = (mode, cfg, sfl)
+    if k not in cache:
+        cache[k] = build()
+    return cache[k]
+
+
+def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
+               sfl: SFLConfig, params: Params, batch_fn: Callable[[int], Batch],
+               schedule: strag.Schedule, key, *, rounds: int,
+               start_round: int = 0, chunk_size: int = 8,
+               mode: str = "scan", state: Optional[State] = None,
+               checkpointer=None, ckpt_every: int = 0,
+               chunk_callback: Optional[Callable] = None,
+               **algo_opts) -> EngineResult:
+    """Run rounds [start_round, rounds) of ``algorithm``.
+
+    batch_fn(r) returns the round-r host batch (leaves with leading M dim;
+    must be stateless in r so restarts are exact). ``schedule`` provides the
+    (R, M) delay/mask rows (cyclic if shorter than the run) and the
+    wall-clock knobs. ``key`` is the run's base PRNG key; round r uses
+    fold_in(key, r).
+
+    mode='scan': rounds execute in chunks of ``chunk_size`` as one jit'd
+    lax.scan per chunk with params/state donated between chunks; metrics
+    flush to host (and ``chunk_callback(ChunkInfo, params, state)`` /
+    checkpointing fire) only at chunk boundaries, which are aligned to
+    ckpt_every. mode='python': the legacy per-round loop — one jit call +
+    host sync per round (equivalence/bench baseline).
+
+    Checkpoints save at step = round index of the last completed round in
+    the chunk; resume by restoring params and passing start_round=step+1.
+    """
+    algo = get_algorithm(algorithm, **algo_opts)
+    if mode not in ("scan", "python"):
+        raise ValueError(f"run_rounds: mode must be 'scan'|'python', "
+                         f"got {mode!r}")
+    n_run = rounds - start_round
+    if n_run <= 0:
+        empty = np.zeros((0,), np.float64)
+        return EngineResult(params, state, {}, empty, empty, 0.0)
+
+    if state is None:
+        state = algo.init_state(cfg, sfl, params,
+                                jax.tree.map(jnp.asarray, batch_fn(start_round)))
+
+    rows = list(range(start_round, rounds))
+    mask_of = getattr(algo, "round_mask",
+                      lambda sched, r: sched.masks[r % sched.n_rounds])
+    masks = np.stack([mask_of(schedule, r) for r in rows])
+    round_times = np.array([algo.time_model(*schedule.row(r), sfl, schedule)
+                            for r in rows])
+    keys = fold_in_keys(key, start_round, n_run)
+
+    chunks: list = []
+
+    def flush(mets, r0, r1):
+        host = jax.tree.map(np.asarray, mets)      # host sync: chunk boundary
+        chunks.append(host)
+        if chunk_callback is not None:
+            i0, i1 = r0 - start_round, r1 - start_round
+            m = masks[i0:i1]
+            rl = ((host["loss"] * m).sum(1)
+                  / np.maximum(m.sum(1), 1.0)).astype(np.float64)
+            chunk_callback(ChunkInfo(r0, r1, host, m, rl,
+                                     round_times[i0:i1]), params, state)
+
+    if mode == "python":
+        round_jit = _cached_jit(algo, "python", cfg, sfl, lambda: jax.jit(
+            lambda p, s, b, m, k: algo.round_fn(cfg, sfl, p, s, b, m, k)))
+        for i, r in enumerate(rows):
+            b = jax.tree.map(jnp.asarray, batch_fn(r))
+            params, state, met = round_jit(params, state, b,
+                                           jnp.asarray(masks[i]), keys[i])
+            flush(jax.tree.map(lambda a: a[None], met), r, r + 1)
+            if (checkpointer is not None and ckpt_every
+                    and (r + 1) % ckpt_every == 0 and r + 1 < rounds):
+                checkpointer.save(r, params)
+    else:
+        params, state = _copy_tree(params), _copy_tree(state)
+        chunk_jit = _cached_jit(algo, "scan", cfg, sfl, lambda: jax.jit(
+            make_chunk_fn(algo, cfg, sfl), donate_argnums=(0, 1)))
+        r = start_round
+        while r < rounds:
+            C = min(chunk_size, rounds - r)
+            if ckpt_every:
+                C = min(C, ckpt_every - r % ckpt_every)
+            i = r - start_round
+            params, state, mets = chunk_jit(
+                params, state, _stack_chunk(batch_fn, r, C),
+                jnp.asarray(masks[i:i + C]), keys[i:i + C])
+            r += C
+            flush(mets, r - C, r)
+            if (checkpointer is not None and ckpt_every
+                    and r % ckpt_every == 0 and r < rounds):
+                checkpointer.save(r - 1, params)
+
+    metrics = {k: np.concatenate([c[k] for c in chunks])
+               for k in chunks[0]}
+    loss = metrics["loss"]
+    round_loss = ((loss * masks).sum(1)
+                  / np.maximum(masks.sum(1), 1.0)).astype(np.float64)
+    if checkpointer is not None:
+        checkpointer.save(rounds - 1, params,
+                          metadata={"loss": float(round_loss[-1])}, block=True)
+    return EngineResult(params, state, metrics, round_loss,
+                        round_times, float(round_times.sum()))

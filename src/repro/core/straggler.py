@@ -15,6 +15,13 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+__all__ = [
+    "DelayModel", "Schedule", "make_schedule", "participation_mask",
+    "deadline_mask", "median_fresh_mask", "plan_tau",
+    "round_time_mu_splitfed", "round_time_vanilla", "round_time_gas",
+    "round_time_local_only", "WallClock", "simulate_total_time",
+]
+
 
 @dataclasses.dataclass(frozen=True)
 class DelayModel:
@@ -58,9 +65,95 @@ def deadline_mask(delays: np.ndarray, deadline: float) -> np.ndarray:
     return m
 
 
+def median_fresh_mask(delays: np.ndarray) -> np.ndarray:
+    """GAS freshness rule (Fig. 2 protocol): clients at or below the
+    per-round median delay deliver in time; the rest are served from the
+    stale activation buffer. delays: (M,) or (R, M); returns same shape."""
+    d = np.asarray(delays, np.float64)
+    med = np.median(d, axis=-1, keepdims=True)
+    return (d <= med).astype(np.float32)
+
+
 def plan_tau(t_straggler: float, t_server: float, tau_max: int = 64) -> int:
     """Paper Eq. 12: τ* = t_straggler / t_server (clipped, >=1)."""
     return int(np.clip(round(t_straggler / max(t_server, 1e-9)), 1, tau_max))
+
+
+# ---------------------------------------------------------------------------
+# precomputed schedules: the system model as (R, M) data
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """The full system-model trace for an R-round run, precomputed on host.
+
+    The engine (core/engine.py) scans these rows as *data* — the jit'd
+    round math never blocks on the host simulator. All arrays are (R, M):
+
+      delays         per-round client compute times (seconds, simulated)
+      participation  0/1 random-participation draw
+      deadline       0/1 deadline survivors (all-ones when deadline <= 0)
+      masks          participation * deadline — what the round consumes
+      fresh_median   GAS freshness rule (<= per-round median delay)
+
+    t_server / t_gen / t_comm are the scalar wall-clock model knobs; the
+    per-algorithm round-time models read them through this object.
+    """
+    delays: np.ndarray
+    participation: np.ndarray
+    deadline: np.ndarray
+    masks: np.ndarray
+    fresh_median: np.ndarray
+    seed: int = 0
+    t_server: float = 0.1
+    t_gen: float = 0.0
+    t_comm: float = 0.0
+
+    @property
+    def n_rounds(self) -> int:
+        return self.delays.shape[0]
+
+    @property
+    def n_clients(self) -> int:
+        return self.delays.shape[1]
+
+    def row(self, r: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(delays, mask) for absolute round r (cyclic past n_rounds)."""
+        i = r % self.n_rounds
+        return self.delays[i], self.masks[i]
+
+
+def make_schedule(seed: int, n_rounds: int, n_clients: int, *,
+                  delay_model: Optional[DelayModel] = None,
+                  straggler_scale: float = 0.0,
+                  participation: float = 1.0,
+                  deadline: float = 0.0,
+                  t_server: float = 0.1,
+                  t_gen: float = 0.0,
+                  t_comm: float = 0.0) -> Schedule:
+    """Precompute the whole system-model trace as stacked (R, M) arrays.
+
+    Deterministic in (seed, n_rounds, n_clients, knobs). The per-round RNG
+    draw order is exactly the historical per-round scalar path of the
+    training driver — delays first (only when the delay model is
+    heterogeneous), then the participation draw — so a schedule row r
+    reproduces what round r of the old Python loop would have sampled
+    (tests/test_engine.py pins this).
+    """
+    dm = delay_model or DelayModel(base=1.0, scale=straggler_scale)
+    rng = np.random.default_rng(seed)
+    stochastic = dm.scale > 0 or dm.hetero is not None
+    delays = np.empty((n_rounds, n_clients), np.float64)
+    parts = np.empty((n_rounds, n_clients), np.float32)
+    for r in range(n_rounds):
+        delays[r] = (dm.sample(rng, n_clients, 1)[0] if stochastic
+                     else np.full((n_clients,), dm.base))
+        parts[r] = participation_mask(rng, n_clients, participation)
+    dead = np.stack([deadline_mask(delays[r], deadline)
+                     for r in range(n_rounds)])
+    return Schedule(delays=delays, participation=parts, deadline=dead,
+                    masks=parts * dead, fresh_median=median_fresh_mask(delays),
+                    seed=seed, t_server=t_server, t_gen=t_gen, t_comm=t_comm)
 
 
 # ---------------------------------------------------------------------------
@@ -93,6 +186,15 @@ def round_time_gas(client_times: np.ndarray, mask: np.ndarray,
     active = client_times[mask > 0]
     t_med = float(np.median(active)) if active.size else 0.0
     return t_med + t_server + t_gen + t_comm
+
+
+def round_time_local_only(client_times: np.ndarray, mask: np.ndarray,
+                          t_comm: float = 0.0) -> float:
+    """FedAvg/FedLoRA: no split-server compute; the round is bounded by the
+    slowest active client's full local pass plus the model exchange."""
+    active = client_times[mask > 0]
+    t_straggler = float(active.max()) if active.size else 0.0
+    return t_straggler + t_comm
 
 
 class WallClock:

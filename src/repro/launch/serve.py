@@ -7,6 +7,7 @@ CPU demo:
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -14,6 +15,19 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import decode_step, init_cache, init_params, prefill
+
+# jit'd decode_step per ModelConfig (hashable, frozen): repeated generate()
+# calls reuse the compiled executable instead of re-tracing a fresh lambda
+# (jax.jit caches by function identity) on every request
+_DECODE_STEP = {}
+
+
+def decode_step_jit(cfg):
+    fn = _DECODE_STEP.get(cfg)
+    if fn is None:
+        fn = jax.jit(functools.partial(decode_step, cfg))
+        _DECODE_STEP[cfg] = fn
+    return fn
 
 
 def generate(cfg, params, batch, prompt_len: int, gen: int, *,
@@ -23,7 +37,7 @@ def generate(cfg, params, batch, prompt_len: int, gen: int, *,
     cache_len = prompt_len + gen
     logits, cache = prefill(cfg, params, batch, cache_len=cache_len)
     out = []
-    step = jax.jit(lambda p, t, c, i: decode_step(cfg, p, t, c, i))
+    step = decode_step_jit(cfg)
     tok = None
     for i in range(gen):
         if temperature > 0 and key is not None:

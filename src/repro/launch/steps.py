@@ -3,6 +3,9 @@ with ShapeDtypeStruct inputs and NamedShardings. Shared by the dry-run, the
 roofline harness, and the real train/serve drivers.
 
   train_4k            -> train_step = one MU-SplitFed global round
+  train_multi         -> build_train_multi_cell: C rounds fused in ONE
+                         lax.scan dispatch (the engine's chunk body, perf
+                         ladder v5) with donated params
   prefill_32k         -> prefill_step (prompt -> last logits + decode cache)
   decode_32k/long_500k-> serve_step (one new token against a seq_len cache)
 """
@@ -168,6 +171,59 @@ def build_cell(arch: str, shape: ShapeConfig, mesh, *, smoke: bool = False,
 
     return Cell(name, fn, (pshapes, token, cache_shapes, pos),
                 (psh, tsh, csh, rep), (rep, csh), (2,), plan, cfg, None)
+
+
+def build_train_multi_cell(arch: str, shape: ShapeConfig, mesh, *,
+                           rounds_per_chunk: int = 4, smoke: bool = False,
+                           sfl: Optional[SFLConfig] = None,
+                           aggregation: str = "dense", replay: str = "auto",
+                           tau: int = 2, algorithm: str = "mu_splitfed",
+                           eval_loss: bool = False) -> Cell:
+    """The fused multi-round train cell (perf ladder v5): C global rounds
+    execute as ONE jit dispatch — a lax.scan over the engine's round body
+    with params donated across the whole chunk. Batches/masks/keys gain a
+    leading (C,) round dim and are scanned as data; the per-round stacked
+    loss comes back for the chunk at once (one host sync per C rounds).
+    """
+    from repro.core import engine as eng
+    assert shape.kind == "train", "train_multi only lowers train shapes"
+    assert algorithm in ("mu_splitfed", "vanilla"), (
+        "the perf cell scans stateless algorithms; stateful ones (gas, "
+        "fedlora) carry their state through engine.run_rounds instead")
+    cfg = get_config(arch, smoke=smoke)
+    multi_pod = "pod" in mesh.axis_names
+    mesh_cfg = MeshConfig(shape=tuple(mesh.devices.shape),
+                          axes=tuple(mesh.axis_names))
+    plan = plan_for(cfg, shape, mesh_cfg, aggregation, replay)
+    rep = NamedSharding(mesh, P())
+    sfl = sfl or default_sfl(cfg, tau=tau)
+    M = sfl.n_clients
+    assert shape.global_batch % M == 0
+    b = shape.global_batch // M
+    C = rounds_per_chunk
+    name = (f"{arch}×{shape.name}×{'x'.join(map(str, mesh_cfg.shape))}"
+            f"×chunk{C}")
+
+    pshapes, psh = _param_setup(cfg, mesh, plan, untied=True)
+    batch1 = _batch_shapes_train(cfg, M, b, shape.seq_len)
+    batch = jax.tree.map(lambda s: _sds((C,) + s.shape, s.dtype), batch1)
+    bsh1 = _batch_shardings_train(cfg, mesh, multi_pod, plan)
+    bsh = jax.tree.map(
+        lambda s: NamedSharding(mesh, P(*((None,) + tuple(s.spec)))), bsh1)
+    masks = _sds((C, M), jnp.float32)
+    keys = _sds((C, 2), jnp.uint32)
+
+    algo = eng.get_algorithm(algorithm, client_mode=plan.client_mode,
+                             aggregation=plan.aggregation, replay=plan.replay,
+                             eval_loss=eval_loss)
+    chunk = eng.make_chunk_fn(algo, cfg, sfl)
+
+    def fn(params, batches, m, k):
+        params, _, mets = chunk(params, (), batches, m, k)
+        return params, mets["loss"]
+
+    return Cell(name, fn, (pshapes, batch, masks, keys),
+                (psh, bsh, rep, rep), (psh, rep), (0,), plan, cfg, sfl)
 
 
 def lower_cell(cell: Cell):

@@ -1,10 +1,14 @@
-"""Training driver: MU-SplitFed (or a baseline) end to end on real data.
+"""Training driver: any registered algorithm end to end on real data,
+through the unified engine (core/engine.py).
 
 Runs on whatever devices exist: CPU smoke configs locally, the production
-mesh on a pod. Fault tolerance built in: atomic async checkpoints every
---ckpt-every rounds, automatic resume from the latest checkpoint (data
-order is stateless in the round index, so restarts are exact), straggler
-simulation + deadline drop + τ re-planning from observed delays.
+mesh on a pod. The per-round Python loop is gone — rounds execute as a
+chunked, jit'd lax.scan with donated params/state; straggler delays,
+participation/deadline masks, and per-round keys are precomputed host-side
+by straggler.make_schedule and scanned as data. Fault tolerance built in:
+atomic async checkpoints at chunk boundaries every --ckpt-every rounds,
+automatic resume from the latest checkpoint (data order and the schedule
+are stateless in the round index, so restarts are exact).
 
 Example (CPU):
     PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \
@@ -16,15 +20,12 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import Checkpointer
 from repro.configs import SFLConfig, get_config
+from repro.core import engine
 from repro.core import straggler as strag
-from repro.core.splitfed import mu_splitfed_round
-from repro.core.baselines import (gas_init_state, gas_round,
-                                  vanilla_splitfed_round)
 from repro.data import FederatedLoader, SyntheticLM, dirichlet_partition
 from repro.models import init_params, untie_params
 
@@ -34,7 +35,7 @@ def main(argv=None):
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--algorithm", default="mu_splitfed",
-                    choices=["mu_splitfed", "vanilla", "gas"])
+                    choices=sorted(engine.ALGORITHMS))
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--tau", type=int, default=2)
     ap.add_argument("--clients", type=int, default=4)
@@ -49,10 +50,18 @@ def main(argv=None):
                          "model")
     ap.add_argument("--t-gen", type=float, default=0.0,
                     help="GAS activation-generation overhead (s) per round")
+    ap.add_argument("--t-comm", type=float, default=0.0,
+                    help="simulated per-round communication time (s), "
+                         "charged by every algorithm's wall-clock model")
     ap.add_argument("--aggregation", default="dense",
                     choices=["dense", "seed_replay"])
     ap.add_argument("--client-mode", default="parallel",
                     choices=["parallel", "sequential"])
+    ap.add_argument("--loop", default="scan", choices=["scan", "python"],
+                    help="fused multi-round scan (default) or the legacy "
+                         "one-dispatch-per-round loop")
+    ap.add_argument("--chunk-size", type=int, default=8,
+                    help="rounds fused per scan dispatch")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
@@ -88,59 +97,35 @@ def main(argv=None):
             start_round = meta["step"] + 1
             print(f"[resume] from round {start_round}")
 
-    rng = np.random.default_rng(args.seed)
-    delay_model = strag.DelayModel(base=1.0, scale=args.straggler_scale)
+    # the whole system model — delays, participation, deadline drops — as
+    # precomputed (R, M) data the engine scans
+    sched = strag.make_schedule(
+        args.seed, args.rounds, args.clients,
+        straggler_scale=args.straggler_scale,
+        participation=args.participation, deadline=args.deadline,
+        t_server=args.t_server, t_gen=args.t_gen, t_comm=args.t_comm)
+
+    algo = engine.get_algorithm(args.algorithm, **(
+        {"client_mode": args.client_mode, "aggregation": args.aggregation}
+        if args.algorithm in ("mu_splitfed", "vanilla")
+        else {"aggregation": args.aggregation}
+        if args.algorithm == "gas" else {}))
     wall = strag.WallClock()
+    t0 = time.time()
 
-    round_fn = jax.jit(lambda p, b, m, k: mu_splitfed_round(
-        cfg, sfl, p, b, m, k, client_mode=args.client_mode,
-        aggregation=args.aggregation))
-    if args.algorithm == "vanilla":
-        round_fn = jax.jit(lambda p, b, m, k: vanilla_splitfed_round(
-            cfg, sfl, p, b, m, k, client_mode=args.client_mode,
-            aggregation=args.aggregation))
-    gas_state = None
+    def on_chunk(info, p, s):
+        for i, r in enumerate(range(info.start, info.stop)):
+            sim_t = wall.tick(info.round_times[i])
+            print(f"round {r:4d}  loss {info.round_loss[i]:.4f}  active "
+                  f"{int(info.masks[i].sum())}/{args.clients}  "
+                  f"wall {time.time()-t0:.1f}s  sim_t {sim_t:.1f}")
 
-    for r in range(start_round, args.rounds):
-        batch = loader.round_batch(r)
-        # straggler system model: delays -> participation/deadline masks
-        delays = delay_model.sample(rng, args.clients, 1)[0] \
-            if args.straggler_scale > 0 else np.ones(args.clients)
-        mask = strag.participation_mask(rng, args.clients,
-                                        args.participation)
-        mask = mask * strag.deadline_mask(delays, args.deadline)
-        rkey = jax.random.fold_in(key, r)
-        t0 = time.time()
-        if args.algorithm == "gas":
-            if gas_state is None:
-                gas_state = gas_init_state(cfg, sfl, params, batch)
-            params, gas_state, metrics = gas_round(
-                cfg, sfl, params, gas_state, batch,
-                jnp.asarray(mask), rkey, aggregation=args.aggregation)
-        else:
-            params, metrics = round_fn(params, batch, jnp.asarray(mask),
-                                       rkey)
-        loss = float(jnp.sum(metrics.loss * mask) / max(mask.sum(), 1))
-        # per-algorithm wall-clock model (straggler.py): each algorithm has
-        # its own overlap structure, so each must be charged its own time
-        if args.algorithm == "gas":
-            dt = strag.round_time_gas(delays, mask, t_server=args.t_server,
-                                      t_gen=args.t_gen)
-        elif args.algorithm == "vanilla":
-            dt = strag.round_time_vanilla(delays, mask,
-                                          t_server=args.t_server)
-        else:
-            dt = strag.round_time_mu_splitfed(delays, mask,
-                                              t_server=args.t_server,
-                                              tau=sfl.tau)
-        sim_t = wall.tick(dt)
-        print(f"round {r:4d}  loss {loss:.4f}  active {int(mask.sum())}/"
-              f"{args.clients}  wall {time.time()-t0:.1f}s  sim_t {sim_t:.1f}")
-        if ck is not None and (r + 1) % args.ckpt_every == 0:
-            ck.save(r, params, metadata={"loss": loss})
-    if ck is not None:
-        ck.save(args.rounds - 1, params, block=True)
-    return params
+    result = engine.run_rounds(
+        algo, cfg, sfl, params, loader.round_batch, sched, key,
+        rounds=args.rounds, start_round=start_round,
+        chunk_size=args.chunk_size, mode=args.loop, checkpointer=ck,
+        ckpt_every=args.ckpt_every, chunk_callback=on_chunk)
+    return result.params
 
 
 if __name__ == "__main__":

@@ -49,6 +49,12 @@ for shape in (ShapeConfig("t", 32, 8, "train"), ShapeConfig("d", 64, 8, "decode"
     cell = build_cell("olmo-1b", shape, mesh, smoke=True,
                       sfl=sfl if shape.kind == "train" else None)
     lower_cell(cell).compile()
+
+# fused multi-round cell (perf ladder v5): 2 rounds in one scan dispatch
+from repro.launch.steps import build_train_multi_cell
+mcell = build_train_multi_cell("olmo-1b", ShapeConfig("t", 32, 8, "train"),
+                               mesh, smoke=True, sfl=sfl, rounds_per_chunk=2)
+lower_cell(mcell).compile()
 print("DISTRIBUTED_OK", diff)
 """
 

@@ -1,0 +1,146 @@
+"""Unified engine semantics: the chunked on-device scan reproduces the
+legacy per-round Python loop for every registered algorithm, the
+precomputed schedule matches the historical per-round scalar draws, and
+checkpoint resume under the chunked scan is bit-identical."""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import maxdiff, tiny_lm_cfg
+from repro.ckpt import Checkpointer, latest_step
+from repro.configs import SFLConfig
+from repro.core import engine
+from repro.core import straggler as strag
+from repro.models import init_params, untie_params
+
+M = 4
+ROUNDS = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_lm_cfg(dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = untie_params(cfg, init_params(cfg, key))
+    sfl = SFLConfig(n_clients=M, tau=2, cut_units=1, lr_server=5e-3,
+                    lr_client=1e-3, lr_global=1.0)
+    # stragglers AND partial participation AND a deadline: the schedule rows
+    # must drive every algorithm identically on both loop paths
+    sched = strag.make_schedule(0, ROUNDS, M, straggler_scale=2.0,
+                                participation=0.5, deadline=4.0,
+                                t_server=0.1, t_gen=0.5, t_comm=0.2)
+
+    def batch_fn(r):
+        k = jax.random.fold_in(jax.random.PRNGKey(99), r)
+        t = jax.random.randint(k, (M, 2, 16), 0, cfg.vocab_size)
+        return {"tokens": t, "labels": t}
+
+    return cfg, params, sfl, sched, batch_fn, key
+
+
+@pytest.mark.parametrize("name", sorted(engine.ALGORITHMS))
+def test_scan_matches_python_loop(setup, name):
+    """Acceptance gate: chunked scan == legacy per-round loop on the loss
+    trajectory (<=1e-5 over >=8 rounds) and on the final params/state, for
+    every algorithm, with stragglers + partial participation enabled.
+    chunk_size=3 exercises ragged chunking (3+3+2)."""
+    cfg, params, sfl, sched, batch_fn, key = setup
+    algo = engine.get_algorithm(name)
+    py = engine.run_rounds(algo, cfg, sfl, params, batch_fn, sched, key,
+                           rounds=ROUNDS, mode="python")
+    sc = engine.run_rounds(algo, cfg, sfl, params, batch_fn, sched, key,
+                           rounds=ROUNDS, mode="scan", chunk_size=3)
+    assert py.round_loss.shape == (ROUNDS,)
+    assert np.max(np.abs(py.round_loss - sc.round_loss)) <= 1e-5
+    assert maxdiff(py.params, sc.params) <= 1e-5
+    if jax.tree.leaves(py.state):               # gas buffer / fedlora adapters
+        assert maxdiff(py.state, sc.state) <= 1e-5
+    assert np.array_equal(py.round_times, sc.round_times)
+    # the stacked metrics honour the adapter's declared spec
+    spec = algo.metrics_spec(cfg, sfl)
+    for k2, shape in spec.items():
+        assert py.metrics[k2].shape == (ROUNDS,) + shape
+
+
+def test_unknown_algorithm_rejected():
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        engine.get_algorithm("nope")
+
+
+def test_make_schedule_deterministic():
+    a = strag.make_schedule(7, 12, 5, straggler_scale=1.5, participation=0.6,
+                            deadline=3.0)
+    b = strag.make_schedule(7, 12, 5, straggler_scale=1.5, participation=0.6,
+                            deadline=3.0)
+    for f in ("delays", "participation", "deadline", "masks", "fresh_median"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    c = strag.make_schedule(8, 12, 5, straggler_scale=1.5, participation=0.6,
+                            deadline=3.0)
+    assert not np.array_equal(a.delays, c.delays)
+
+
+def test_schedule_composes_like_scalar_path():
+    """Array-form schedule rows == the historical per-round scalar path
+    (sample delays, then participation, then compose with the deadline
+    mask) drawn from the same seed."""
+    seed, R, Mloc, scale, part, dl = 3, 10, 6, 2.0, 0.5, 3.5
+    sched = strag.make_schedule(seed, R, Mloc, straggler_scale=scale,
+                                participation=part, deadline=dl)
+    rng = np.random.default_rng(seed)
+    dm = strag.DelayModel(base=1.0, scale=scale)
+    for r in range(R):
+        delays = dm.sample(rng, Mloc, 1)[0]
+        mask = strag.participation_mask(rng, Mloc, part)
+        mask = mask * strag.deadline_mask(delays, dl)
+        assert np.array_equal(sched.delays[r], delays), r
+        assert np.array_equal(sched.masks[r], mask), r
+
+
+def test_schedule_skips_delay_draw_when_homogeneous():
+    """scale=0 must not consume the delay RNG stream (the legacy driver
+    only sampled delays when straggler_scale > 0)."""
+    sched = strag.make_schedule(1, 4, 3, straggler_scale=0.0,
+                                participation=0.5)
+    assert np.array_equal(sched.delays, np.ones((4, 3)))
+    rng = np.random.default_rng(1)
+    for r in range(4):
+        assert np.array_equal(sched.participation[r],
+                              strag.participation_mask(rng, 3, 0.5)), r
+
+
+def test_resume_bit_identical(setup):
+    """Kill after chunk k, resume from the checkpoint: the loss trajectory
+    and final params must be BIT-identical to an uninterrupted run (data
+    order and the schedule are stateless in the round index)."""
+    cfg, params, sfl, sched, batch_fn, key = setup
+    R, C = 6, 2
+    full = engine.run_rounds("mu_splitfed", cfg, sfl, params, batch_fn,
+                             sched, key, rounds=R, mode="scan", chunk_size=C)
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        # "killed" run: only the first two chunks (4 rounds) execute
+        part1 = engine.run_rounds("mu_splitfed", cfg, sfl, params, batch_fn,
+                                  sched, key, rounds=4, mode="scan",
+                                  chunk_size=C, checkpointer=ck,
+                                  ckpt_every=C)
+        ck.wait()
+        step = latest_step(d)
+        assert step == 3
+        restored, meta = ck.restore(params, step)
+        part2 = engine.run_rounds("mu_splitfed", cfg, sfl, restored, batch_fn,
+                                  sched, key, rounds=R,
+                                  start_round=meta["step"] + 1, mode="scan",
+                                  chunk_size=C)
+    resumed_traj = np.concatenate([part1.round_loss, part2.round_loss])
+    assert np.array_equal(full.round_loss, resumed_traj)
+    assert maxdiff(full.params, part2.params) == 0.0
+
+
+def test_fresh_median_rule():
+    d = np.array([[1.0, 5.0, 2.0, 9.0]])
+    m = strag.median_fresh_mask(d)
+    assert m.tolist() == [[1.0, 0.0, 1.0, 0.0]]
