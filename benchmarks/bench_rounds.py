@@ -93,8 +93,16 @@ def main(argv=None):
     ap.add_argument("--algorithm", default="mu_splitfed",
                     choices=sorted(engine.ALGORITHMS))
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: few rounds, one rep, no json write "
+                         "— runs only the scan==python equivalence gate")
     ap.add_argument("--out", default="perf_iterations.json")
     args = ap.parse_args(argv)
+    if args.smoke:
+        row = run(rounds=8, chunk=4, algorithm=args.algorithm, reps=1)
+        print(json.dumps(row, indent=1))
+        print("smoke: scan == python equivalence gate passed")
+        return row
     row = run(rounds=args.rounds, chunk=args.chunk, algorithm=args.algorithm,
               reps=args.reps)
     print(json.dumps(row, indent=1))

@@ -43,17 +43,41 @@ def batch_fn_for(ds, parts, batch, seed):
     return lambda r: make_client_batches(ds, parts, r, batch, seed)
 
 
+def run_mu_splitfed_result(cfg, params, ds, parts, key, *, M, tau, cut,
+                           rounds, batch=2, lr_server=5e-3, lr_client=1e-3,
+                           lr_global=1.0, participation=1.0, population=None,
+                           controller=None, straggler_scale=0.0,
+                           t_server=0.1, t_comm=0.0, seed=0,
+                           chunk_size=8) -> engine.EngineResult:
+    """Full EngineResult for one MU-SplitFed run (engine, fused scan).
+
+    The fleet resolves through the one ClientPopulation.resolve path: an
+    explicit ``population`` (heterogeneous cohorts / Markov availability)
+    or the deprecated scalar shorthand. ``controller`` (e.g.
+    engine.AdaptiveTau) re-plans τ at chunk boundaries.
+    """
+    sfl = SFLConfig(n_clients=M, tau=tau, cut_units=cut,
+                    lr_server=lr_server, lr_client=lr_client,
+                    lr_global=lr_global, participation=participation,
+                    straggler_rate=straggler_scale, population=population)
+    sched = strag.make_schedule(seed, rounds,
+                                population=strag.ClientPopulation.resolve(sfl),
+                                t_server=t_server, t_comm=t_comm)
+    return engine.run_rounds("mu_splitfed", cfg, sfl, params,
+                             batch_fn_for(ds, parts, batch, seed), sched, key,
+                             rounds=rounds, chunk_size=chunk_size,
+                             controller=controller)
+
+
 def run_mu_splitfed(cfg, params, ds, parts, key, *, M, tau, cut, rounds,
                     batch=2, lr_server=5e-3, lr_client=1e-3, lr_global=1.0,
                     participation=1.0, seed=0, chunk_size=8) -> List[float]:
     """Returns the per-round mean client loss curve (engine, fused scan)."""
-    sfl = SFLConfig(n_clients=M, tau=tau, cut_units=cut,
-                    lr_server=lr_server, lr_client=lr_client,
-                    lr_global=lr_global)
-    sched = strag.make_schedule(seed, rounds, M, participation=participation)
-    res = engine.run_rounds("mu_splitfed", cfg, sfl, params,
-                            batch_fn_for(ds, parts, batch, seed), sched, key,
-                            rounds=rounds, chunk_size=chunk_size)
+    res = run_mu_splitfed_result(
+        cfg, params, ds, parts, key, M=M, tau=tau, cut=cut, rounds=rounds,
+        batch=batch, lr_server=lr_server, lr_client=lr_client,
+        lr_global=lr_global, participation=participation, seed=seed,
+        chunk_size=chunk_size)
     return [float(x) for x in res.round_loss]
 
 
@@ -62,6 +86,17 @@ def rounds_to_target(losses: List[float], target: float) -> int:
     smooth = np.convolve(losses, np.ones(3) / 3, mode="valid")
     hits = np.where(smooth <= target)[0]
     return int(hits[0]) + 1 if len(hits) else len(losses) + 1
+
+
+def wall_to_target(losses, round_times, target: float) -> float:
+    """Simulated wall-clock at which the smoothed loss first reaches the
+    target (inf if it never does) — the paper's straggler-resilience
+    metric: progress per unit *time*, not per round."""
+    smooth = np.convolve(losses, np.ones(3) / 3, mode="valid")
+    hits = np.where(smooth <= target)[0]
+    if not len(hits):
+        return float("inf")
+    return float(np.cumsum(round_times)[hits[0] + 2])
 
 
 def timed(fn, *args, reps=3):

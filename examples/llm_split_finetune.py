@@ -27,14 +27,28 @@ def main():
     ap.add_argument("--cut", type=int, default=1)
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--population", default="",
+                    help="tiered fleet spec, e.g. 'tiered:2x1.0,2x0.5' "
+                         "(overrides --clients)")
+    ap.add_argument("--straggler-scale", type=float, default=0.0,
+                    help="shared exponential jitter for every cohort")
     args = ap.parse_args()
+
+    from repro.core.straggler import ClientPopulation, parse_population
+    population = (parse_population(args.population,
+                                   straggler_scale=args.straggler_scale)
+                  if args.population else None)
+    if population is not None:
+        args.clients = population.n_clients
+        print(f"fleet: {population.describe()}")
 
     cfg = get_config("paper-opt-1.3b", smoke=True).replace(dtype="float32")
     best_cut, _ = theory.plan_cut(cfg, args.tau)
     print(f"theory cut planner: d_c=sqrt(d/tau) suggests cut={best_cut} "
           f"for tau={args.tau} (using --cut {args.cut})")
     sfl = SFLConfig(n_clients=args.clients, tau=args.tau, cut_units=args.cut,
-                    lr_server=5e-3, lr_client=1e-3, lr_global=1.0)
+                    lr_server=5e-3, lr_client=1e-3, lr_global=1.0,
+                    population=population)
 
     key = jax.random.PRNGKey(0)
     params = untie_params(cfg, init_params(cfg, key))
@@ -58,7 +72,8 @@ def main():
               f"{float(info.metrics['loss'].mean()):.4f}  "
               f"label acc {eval_acc(p):.2f}")
 
-    sched = make_schedule(0, args.rounds, args.clients)
+    sched = make_schedule(0, args.rounds,
+                          population=ClientPopulation.resolve(sfl))
     print(f"initial label accuracy: {eval_acc(params):.2f}")
     engine.run_rounds("mu_splitfed", cfg, sfl, params, batch_fn, sched, key,
                       rounds=args.rounds, chunk_size=5,

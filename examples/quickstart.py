@@ -13,10 +13,16 @@ from repro.data import SyntheticLM, dirichlet_partition, make_client_batches
 from repro.models import init_params, untie_params
 
 # 1. a small model + the paper's algorithm config: M clients, τ unbalanced
-#    server steps per round, cut after the first unit
+#    server steps per round, cut after the first unit. The client fleet is
+#    a ClientPopulation — one homogeneous cohort here; swap in tiered
+#    cohorts / Markov availability for heterogeneity (see
+#    examples/straggler_resilience.py)
+from repro.core.population import ClientPopulation
+
 cfg = get_config("olmo-1b", smoke=True).replace(dtype="float32")
 sfl = SFLConfig(n_clients=4, tau=2, cut_units=1,
-                lr_server=5e-3, lr_client=1e-3, lr_global=1.0)
+                lr_server=5e-3, lr_client=1e-3, lr_global=1.0,
+                population=ClientPopulation.single(4))
 
 # 2. params + non-IID federated data
 key = jax.random.PRNGKey(0)
@@ -28,7 +34,8 @@ parts = dirichlet_partition(np.arange(256) % 8, sfl.n_clients, alpha=0.5)
 #    (R, M) data and scans Algorithm 1 over rounds on-device — the server
 #    does τ ZO updates per client round on the stale embedding, clients
 #    update from a single returned scalar
-sched = make_schedule(seed=0, n_rounds=10, n_clients=sfl.n_clients)
+sched = make_schedule(seed=0, n_rounds=10,
+                      population=ClientPopulation.resolve(sfl))
 result = engine.run_rounds(
     "mu_splitfed", cfg, sfl, params,
     lambda r: make_client_batches(ds, parts, r, batch_per_client=2, seed=0),

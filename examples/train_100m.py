@@ -41,32 +41,55 @@ def main():
                     help="smoke-scale model (CI)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_100m")
     ap.add_argument("--straggler-scale", type=float, default=2.0)
+    ap.add_argument("--population", default="",
+                    help="tiered fleet spec, e.g. 'tiered:2x1.0,2x0.25' "
+                         "(overrides --clients)")
+    ap.add_argument("--adaptive-tau", action="store_true",
+                    help="re-plan tau at chunk boundaries (AdaptiveTau)")
     args = ap.parse_args()
+
+    population = (strag.parse_population(
+        args.population, straggler_scale=args.straggler_scale)
+        if args.population else None)
+    n_clients = population.n_clients if population else args.clients
 
     cfg = (get_config("olmo-1b", smoke=True) if args.tiny else model_100m())
     key = jax.random.PRNGKey(0)
     params = untie_params(cfg, init_params(cfg, key))
     print(f"model: {param_count(params)/1e6:.1f}M params  "
-          f"clients={args.clients} tau={args.tau}")
+          f"clients={n_clients} tau={args.tau}")
+    if population is not None:
+        print(f"fleet: {population.describe()}")
 
-    sfl = SFLConfig(n_clients=args.clients, tau=args.tau, cut_units=2,
-                    lr_server=2e-3, lr_client=5e-4, lr_global=1.0)
+    sfl = SFLConfig(n_clients=n_clients, tau=args.tau, cut_units=2,
+                    lr_server=2e-3, lr_client=5e-4, lr_global=1.0,
+                    straggler_rate=args.straggler_scale,
+                    population=population)
     ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq, seed=0)
-    parts = dirichlet_partition(np.arange(8192) % 16, args.clients,
+    parts = dirichlet_partition(np.arange(8192) % 16, n_clients,
                                 alpha=0.5, seed=0)
     loader = FederatedLoader(ds, parts, args.batch, seed=0)
 
+    controller = (engine.AdaptiveTau(tau_max=16, quantize=True)
+                  if args.adaptive_tau else None)
     ck = Checkpointer(args.ckpt_dir, keep=3)
-    start = 0
+    start, state = 0, None
     if latest_step(args.ckpt_dir) is not None:
-        params, meta = ck.restore(params)
+        # engine bundles algorithm state with params, so stateful
+        # algorithms resume exactly; mu_splitfed is stateless and
+        # restores params alone. Controller decisions (adapted tau/lr)
+        # and EMA state replay from the checkpoint metadata.
+        params, state, meta = engine.restore_run(
+            ck, "mu_splitfed", cfg, sfl, params, loader.round_batch)
+        sfl = engine.apply_resume_overrides(sfl, meta, controller)
         start = meta["step"] + 1
-        print(f"[resume] round {start}")
+        print(f"[resume] round {start} (tau={sfl.tau})")
 
-    # the full system model precomputed as data; the engine runs the rounds
-    # as fused on-device scans with checkpoints at chunk boundaries
-    sched = strag.make_schedule(0, args.rounds, args.clients,
-                                straggler_scale=args.straggler_scale,
+    # the full system model — per-cohort delays and availability — as
+    # precomputed data; the engine runs the rounds as fused on-device
+    # scans with checkpoints at chunk boundaries
+    sched = strag.make_schedule(0, args.rounds,
+                                population=strag.ClientPopulation.resolve(sfl),
                                 t_server=0.1)
     t0 = time.time()
     wall = strag.WallClock()
@@ -81,8 +104,9 @@ def main():
 
     engine.run_rounds("mu_splitfed", cfg, sfl, params, loader.round_batch,
                       sched, key, rounds=args.rounds, start_round=start,
-                      chunk_size=5, checkpointer=ck, ckpt_every=25,
-                      chunk_callback=on_chunk)
+                      state=state, chunk_size=5, checkpointer=ck,
+                      ckpt_every=25, chunk_callback=on_chunk,
+                      controller=controller)
     print("done.")
 
 

@@ -1,2 +1,2 @@
-from repro.ckpt.checkpoint import (Checkpointer, latest_step, restore_params,
-                                   save_params)
+from repro.ckpt.checkpoint import (Checkpointer, latest_step, read_meta,
+                                   restore_params, save_params)

@@ -86,6 +86,19 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def read_meta(ckpt_dir: str, step: Optional[int] = None) -> dict:
+    """Load a checkpoint's meta.json (step, metadata, dtypes) without
+    touching the arrays — lets callers decide the restore template (e.g.
+    params-only vs {'params','state'} engine bundles) before restoring."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:010d}", "meta.json")
+    with open(path) as f:
+        return json.load(f)
+
+
 def restore_params(ckpt_dir: str, like: Params, step: Optional[int] = None,
                    shardings=None) -> tuple[Params, dict]:
     """Restore into the structure of ``like``. ``shardings`` (optional tree

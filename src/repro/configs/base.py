@@ -9,7 +9,10 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Optional, Tuple, TYPE_CHECKING
+
+if TYPE_CHECKING:                      # annotation-only: configs must not
+    from repro.core.population import ClientPopulation   # import core
 
 
 @dataclass(frozen=True)
@@ -147,7 +150,16 @@ SHAPES_BY_NAME = {s.name: s for s in SHAPES}
 
 @dataclass(frozen=True)
 class SFLConfig:
-    """MU-SplitFed algorithm config (the paper's technique)."""
+    """MU-SplitFed algorithm config (the paper's technique).
+
+    The client fleet is described by ``population`` (a
+    ``repro.core.population.ClientPopulation`` — heterogeneous cohorts,
+    Markov availability, per-tier comm scales). The scalar knobs
+    ``straggler_rate`` / ``participation`` are the DEPRECATED
+    single-homogeneous-cohort shorthand; both paths resolve through
+    ``ClientPopulation.resolve(sfl)`` and the shorthand reproduces the
+    historical schedules bit-for-bit.
+    """
     n_clients: int = 16         # M
     tau: int = 2                # unbalanced server update steps per round
     n_perturbations: int = 1    # P (SPSA averaging)
@@ -156,12 +168,15 @@ class SFLConfig:
     lr_client: float = 5e-3     # eta_c
     lr_global: float = 0.3      # eta_g
     zo_eps: float = 5e-3        # lambda (smoothing)
-    participation: float = 1.0  # fraction of clients active per round
+    participation: float = 1.0  # DEPRECATED shorthand (see population)
     perturbation_dist: str = "gaussian"  # gaussian|sphere (paper: sphere)
     seed: int = 0
     # straggler simulation
-    straggler_rate: float = 0.0     # exponential delay scale (0 = off)
+    straggler_rate: float = 0.0     # DEPRECATED shorthand (see population)
     deadline: float = 0.0           # drop clients beyond deadline (0 = off)
+    # the first-class fleet spec (hashable, jit-static like the rest of
+    # this config); None -> single cohort from the scalar shorthands
+    population: Optional["ClientPopulation"] = None
 
 
 @dataclass(frozen=True)

@@ -2,9 +2,13 @@
 zeroth-order optimization), its baselines, the straggler system model, the
 convergence-theory calculators, and the unified algorithm engine that runs
 any of them as a chunked on-device multi-round scan."""
-from repro.core import baselines, engine, straggler, theory, zo
-from repro.core.engine import (ALGORITHMS, Algorithm, ChunkInfo, EngineResult,
-                               get_algorithm, run_rounds)
+from repro.core import baselines, engine, population, straggler, theory, zo
+from repro.core.engine import (ALGORITHMS, AdaptiveTau, Algorithm, ChunkInfo,
+                               Controller, EngineResult, SchedWindow,
+                               apply_resume_overrides, get_algorithm,
+                               restore_run, run_rounds)
+from repro.core.population import (ClientPopulation, Cohort, DelayModel,
+                                   parse_population)
 from repro.core.splitfed import (RoundMetrics, mu_split_round,
                                  mu_splitfed_round)
 from repro.core.straggler import Schedule, make_schedule

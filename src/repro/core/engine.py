@@ -24,15 +24,30 @@ replaces all of them:
                the legacy one-jit-call-per-round loop as the equivalence
                baseline (benchmarks/bench_rounds.py gates scan == python
                on the loss trajectory; perf ladder rung v5).
+  Controller   chunk-boundary policy hook: ``update(round_idx, window,
+               metrics) -> {sfl field: value}``. AdaptiveTau is the
+               paper's "adaptive tuning of τ" — it re-plans τ from the
+               observed straggler gap via straggler.plan_tau; a τ change
+               re-jits the round body, amortized across chunks by the
+               per-algo executable cache.
 
 Chunk boundaries are aligned to ckpt_every, so a run killed after chunk k
 resumes from its checkpoint onto the *same* round boundaries — with
 stateless data order and precomputed schedules the resumed trajectory is
-bit-identical to an uninterrupted run (tests/test_engine.py).
+bit-identical to an uninterrupted run (tests/test_engine.py). Stateful
+algorithms (GAS activation buffer, FedLoRA adapters) checkpoint their
+engine state alongside params as a {'params','state'} bundle; restore_run
+resumes them exactly. Controller runs additionally record the overrides in
+effect and the controller's own state in the checkpoint metadata —
+apply_resume_overrides replays them, so a resumed adaptive-τ run continues
+at the adapted τ/η_s with its EMA intact (the first post-resume chunk has
+no observed window and keeps the restored τ, so such runs are exact up to
+that one skipped re-plan).
 """
 from __future__ import annotations
 
-from typing import (Any, Callable, Dict, NamedTuple, Optional, Protocol,
+import dataclasses
+from typing import (Any, Callable, Dict, List, NamedTuple, Optional, Protocol,
                     Tuple, Union, runtime_checkable)
 
 import jax
@@ -138,7 +153,7 @@ class MuSplitFed(AlgorithmBase):
 
     def time_model(self, delays, mask, sfl, sched):
         return strag.round_time_mu_splitfed(delays, mask, sched.t_server,
-                                            sfl.tau, sched.t_comm)
+                                            sfl.tau, sched.comm_for(mask))
 
     def metrics_spec(self, cfg, sfl):
         M = sfl.n_clients
@@ -161,7 +176,7 @@ class VanillaSplitFed(MuSplitFed):
 
     def time_model(self, delays, mask, sfl, sched):
         return strag.round_time_vanilla(delays, mask, sched.t_server,
-                                        sched.t_comm)
+                                        sched.comm_for(mask))
 
     def metrics_spec(self, cfg, sfl):
         return {"loss": (sfl.n_clients,), "server_deltas": (sfl.n_clients, 1),
@@ -202,7 +217,7 @@ class Gas(AlgorithmBase):
 
     def time_model(self, delays, mask, sfl, sched):
         return strag.round_time_gas(delays, mask, sched.t_server, sched.t_gen,
-                                    sched.t_comm)
+                                    sched.comm_for(mask))
 
     def metrics_spec(self, cfg, sfl):
         return {"loss": (sfl.n_clients,), "server_deltas": (sfl.n_clients, 1),
@@ -232,7 +247,7 @@ class FedAvg(AlgorithmBase):
         return params, state, {"loss": loss0.astype(jnp.float32)}
 
     def time_model(self, delays, mask, sfl, sched):
-        return strag.round_time_local_only(delays, mask, sched.t_comm)
+        return strag.round_time_local_only(delays, mask, sched.comm_for(mask))
 
 
 @register
@@ -264,6 +279,94 @@ class FedLora(FedAvg):
 
 
 # ---------------------------------------------------------------------------
+# chunk-boundary controllers (adaptive τ / deadline policies)
+# ---------------------------------------------------------------------------
+
+class SchedWindow(NamedTuple):
+    """What a Controller observes at a chunk boundary: the system-model
+    rows of the rounds executed since its previous update."""
+    start: int
+    stop: int
+    delays: np.ndarray   # (C, M) simulated client compute times
+    masks: np.ndarray    # (C, M) participation·deadline rows consumed
+    t_server: float
+    t_comm: float
+
+
+@runtime_checkable
+class Controller(Protocol):
+    """Chunk-boundary policy hook.
+
+    ``update`` runs once per chunk, before it dispatches, with the window
+    of rounds just executed (None at the very first boundary) and the last
+    flushed ChunkInfo. The returned dict maps SFLConfig field names to new
+    values ('tau', 'deadline', 'lr_server', ...) and is applied via
+    dataclasses.replace; unchanged fields may be included (no-ops). A τ
+    change re-traces the jit'd round body — the per-algo executable cache
+    keyed on (mode, cfg, sfl) amortizes that across chunks, so revisited
+    τ values reuse their compiled executables. An optional ``bind(sfl)``
+    is called once at run start with the initial config.
+    """
+
+    def update(self, round_idx: int, window: Optional[SchedWindow],
+               metrics: Optional["ChunkInfo"]) -> Dict[str, Any]: ...
+
+
+class AdaptiveTau:
+    """The paper's "adaptive tuning of τ" (§5) as an engine Controller.
+
+    At each chunk boundary it EMA-smooths the observed straggler gap
+    (max active delay per executed round) and re-plans
+    τ* = t_straggler / t_server via straggler.plan_tau (Eq. 12). With
+    ``couple_lr`` (default) the server lr keeps Thm 4.1's coupling:
+    η_s·τ is held at its initial value, so a τ change rescales η_s and
+    the per-round server drift stays stable. ``trace`` records the
+    (round_idx, τ) decisions for analysis (benchmarks/fig5_adaptive_tau).
+    """
+
+    def __init__(self, tau_max: int = 64, ema: float = 0.5,
+                 couple_lr: bool = True, quantize: bool = False):
+        self.tau_max = tau_max
+        self.ema = ema
+        self.couple_lr = couple_lr
+        self.quantize = quantize      # snap τ to powers of two: bounds the
+        self.t_hat: Optional[float] = None        # number of distinct jit
+        self._eta_step: Optional[float] = None    # executables (η_s·τ cached
+        self.trace: List[Tuple[int, int]] = []    # at bind time)
+
+    def bind(self, sfl) -> None:
+        if self.couple_lr and self._eta_step is None:
+            self._eta_step = sfl.lr_server * sfl.tau
+
+    # checkpointable controller state (engine saves it in the checkpoint
+    # metadata; apply_resume_overrides restores it)
+    def state_dict(self) -> Dict[str, Any]:
+        return {"t_hat": self.t_hat, "eta_step": self._eta_step}
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        self.t_hat = d.get("t_hat")
+        self._eta_step = d.get("eta_step")
+
+    def update(self, round_idx, window, metrics):
+        if window is None or window.delays.size == 0:
+            return {}
+        act = np.where(window.masks > 0, window.delays, -np.inf)
+        per_round = act.max(axis=1)
+        per_round = np.where(np.isfinite(per_round), per_round, 0.0)
+        obs = float(per_round.mean())
+        self.t_hat = (obs if self.t_hat is None
+                      else self.ema * obs + (1.0 - self.ema) * self.t_hat)
+        tau = strag.plan_tau(self.t_hat, window.t_server, self.tau_max)
+        if self.quantize:
+            tau = min(1 << int(round(np.log2(max(tau, 1)))), self.tau_max)
+        self.trace.append((round_idx, tau))
+        out = {"tau": tau}
+        if self._eta_step is not None:
+            out["lr_server"] = self._eta_step / tau
+        return out
+
+
+# ---------------------------------------------------------------------------
 # the fused multi-round driver
 # ---------------------------------------------------------------------------
 
@@ -274,6 +377,7 @@ class EngineResult(NamedTuple):
     round_loss: np.ndarray          # (rounds,) mask-weighted mean client loss
     round_times: np.ndarray         # (rounds,) simulated per-round wall-clock
     sim_time: float                 # sum(round_times)
+    tau_per_round: np.ndarray = None  # (rounds,) τ in effect each round
 
 
 class ChunkInfo(NamedTuple):
@@ -345,6 +449,75 @@ def _cached_jit(algo: Algorithm, mode: str, cfg: ModelConfig, sfl: SFLConfig,
     return cache[k]
 
 
+def _has_state(state) -> bool:
+    return bool(jax.tree.leaves(state))
+
+
+def _ckpt_tree(params, state):
+    """What the engine checkpoints: params alone for stateless algorithms
+    (back-compatible with pre-existing checkpoints), else a
+    {'params','state'} bundle so resume is exact for stateful algorithms
+    (GAS activation buffer, FedLoRA adapters)."""
+    return {"params": params, "state": state} if _has_state(state) else params
+
+
+def restore_run(checkpointer, algorithm: Union[str, Algorithm],
+                cfg: ModelConfig, sfl: SFLConfig, params: Params,
+                batch_fn: Callable[[int], Batch], *,
+                step: Optional[int] = None,
+                **algo_opts) -> Tuple[Params, State, dict]:
+    """Restore an engine checkpoint for resume: (params, state, meta).
+
+    Stateful algorithms restore their engine state alongside params when
+    the checkpoint carries the {'params','state'} bundle (the state
+    template — and hence one batch — is only materialized on that path).
+    Legacy params-only checkpoints return state=None: run_rounds then
+    re-inits from the first resumed round's batch, the historical
+    behaviour. Continue with ``run_rounds(..., state=state,
+    start_round=meta['step'] + 1)``; controller-driven runs should also
+    pass meta through ``apply_resume_overrides``.
+    """
+    from repro.ckpt import read_meta
+    algo = get_algorithm(algorithm, **algo_opts)
+    checkpointer.wait()
+    meta = read_meta(checkpointer.dir, step)
+    start = meta["step"] + 1
+    if meta.get("metadata", {}).get("has_state"):
+        state = algo.init_state(cfg, sfl, params,
+                                jax.tree.map(jnp.asarray, batch_fn(start)))
+        bundle, meta = checkpointer.restore(
+            {"params": params, "state": state}, meta["step"])
+        return bundle["params"], bundle["state"], meta
+    params, meta = checkpointer.restore(params, meta["step"])
+    return params, None, meta
+
+
+def apply_resume_overrides(sfl: SFLConfig, meta: dict,
+                           controller: Optional[Controller] = None
+                           ) -> SFLConfig:
+    """Re-apply a resumed run's controller decisions.
+
+    Engine checkpoints record the SFLConfig fields a controller had
+    overridden by save time (metadata['controller_overrides']) and the
+    controller's own state (metadata['controller_state'], via its
+    state_dict). This replays both onto the resume configuration so the
+    run continues at the adapted τ / lrs with the controller's EMA intact
+    instead of silently restarting from the CLI values. (The first
+    post-resume chunk has no observed window, so it keeps the restored τ;
+    a controller that overrode 'deadline' should also rebuild its
+    schedule with that deadline.)
+    """
+    md = meta.get("metadata", {})
+    overrides = md.get("controller_overrides") or {}
+    if overrides:
+        sfl = dataclasses.replace(sfl, **overrides)
+    cs = md.get("controller_state")
+    if controller is not None and cs and hasattr(controller,
+                                                 "load_state_dict"):
+        controller.load_state_dict(cs)
+    return sfl
+
+
 def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                sfl: SFLConfig, params: Params, batch_fn: Callable[[int], Batch],
                schedule: strag.Schedule, key, *, rounds: int,
@@ -352,6 +525,7 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                mode: str = "scan", state: Optional[State] = None,
                checkpointer=None, ckpt_every: int = 0,
                chunk_callback: Optional[Callable] = None,
+               controller: Optional[Controller] = None,
                **algo_opts) -> EngineResult:
     """Run rounds [start_round, rounds) of ``algorithm``.
 
@@ -366,10 +540,20 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
     flush to host (and ``chunk_callback(ChunkInfo, params, state)`` /
     checkpointing fire) only at chunk boundaries, which are aligned to
     ckpt_every. mode='python': the legacy per-round loop — one jit call +
-    host sync per round (equivalence/bench baseline).
+    host sync per round (equivalence/bench baseline); it shares the same
+    chunk segmentation so controller decisions land on identical
+    boundaries in both modes.
+
+    ``controller`` (e.g. AdaptiveTau) runs at every chunk boundary and may
+    override SFLConfig fields for the remaining rounds — 'tau' re-plans the
+    unbalanced server updates (re-jit amortized by the per-algo executable
+    cache), 'deadline' re-derives the straggler-drop masks from the
+    schedule's delay rows. Masks, wall-clock round times, and the τ trace
+    (EngineResult.tau_per_round) always reflect what was actually applied.
 
     Checkpoints save at step = round index of the last completed round in
-    the chunk; resume by restoring params and passing start_round=step+1.
+    the chunk (stateful algorithms bundle their engine state — see
+    restore_run); resume via restore_run and start_round=step+1.
     """
     algo = get_algorithm(algorithm, **algo_opts)
     if mode not in ("scan", "python"):
@@ -378,70 +562,166 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
     n_run = rounds - start_round
     if n_run <= 0:
         empty = np.zeros((0,), np.float64)
-        return EngineResult(params, state, {}, empty, empty, 0.0)
+        return EngineResult(params, state, {}, empty, empty, 0.0,
+                            np.zeros((0,), np.int64))
 
     if state is None:
         state = algo.init_state(cfg, sfl, params,
                                 jax.tree.map(jnp.asarray, batch_fn(start_round)))
 
+    R = schedule.n_rounds
     rows = list(range(start_round, rounds))
     mask_of = getattr(algo, "round_mask",
                       lambda sched, r: sched.masks[r % sched.n_rounds])
-    masks = np.stack([mask_of(schedule, r) for r in rows])
-    round_times = np.array([algo.time_model(*schedule.row(r), sfl, schedule)
-                            for r in rows])
+    sched_eff = schedule                 # re-derived on controller deadline
+    masks = np.stack([mask_of(sched_eff, r) for r in rows])
+    time_masks = np.stack([sched_eff.masks[r % R] for r in rows])
+    round_times = np.array([algo.time_model(sched_eff.delays[r % R],
+                                            time_masks[i], sfl, sched_eff)
+                            for i, r in enumerate(rows)])
+    tau_used = np.full(n_run, sfl.tau, np.int64)
     keys = fold_in_keys(key, start_round, n_run)
 
+    # chunk segmentation (aligned to ckpt_every) — shared by both modes and
+    # by the controller's update boundaries
+    segments: List[Tuple[int, int]] = []
+    r = start_round
+    while r < rounds:
+        C = min(chunk_size, rounds - r)
+        if ckpt_every:
+            C = min(C, ckpt_every - r % ckpt_every)
+        segments.append((r, r + C))
+        r += C
+
+    if controller is not None and hasattr(controller, "bind"):
+        controller.bind(sfl)
+
     chunks: list = []
+    last_info: Optional[ChunkInfo] = None
+    applied: Dict[str, Any] = {}    # controller overrides in effect
+
+    def ckpt_meta(**extra):
+        md = {"has_state": _has_state(state), **extra}
+        if controller is not None:
+            if applied:             # values must be JSON-serializable
+                md["controller_overrides"] = dict(applied)
+            if hasattr(controller, "state_dict"):
+                md["controller_state"] = controller.state_dict()
+        return md
+
+    def seg_info(r0, r1):
+        i0, i1 = r0 - start_round, r1 - start_round
+        seg = chunks[-(r1 - r0):]
+        host = {k2: np.concatenate([c[k2] for c in seg]) for k2 in seg[0]}
+        m = masks[i0:i1]
+        rl = ((host["loss"] * m).sum(1)
+              / np.maximum(m.sum(1), 1.0)).astype(np.float64)
+        return ChunkInfo(r0, r1, host, m, rl, round_times[i0:i1])
 
     def flush(mets, r0, r1):
+        nonlocal last_info
         host = jax.tree.map(np.asarray, mets)      # host sync: chunk boundary
         chunks.append(host)
+        i0, i1 = r0 - start_round, r1 - start_round
+        m = masks[i0:i1]
+        rl = ((host["loss"] * m).sum(1)
+              / np.maximum(m.sum(1), 1.0)).astype(np.float64)
+        last_info = ChunkInfo(r0, r1, host, m, rl, round_times[i0:i1])
         if chunk_callback is not None:
-            i0, i1 = r0 - start_round, r1 - start_round
-            m = masks[i0:i1]
-            rl = ((host["loss"] * m).sum(1)
-                  / np.maximum(m.sum(1), 1.0)).astype(np.float64)
-            chunk_callback(ChunkInfo(r0, r1, host, m, rl,
-                                     round_times[i0:i1]), params, state)
+            chunk_callback(last_info, params, state)
+
+    def controller_step(seg_idx):
+        """Apply the controller's SFLConfig overrides for rounds >= this
+        segment; re-derive masks / wall-clock rows they affect."""
+        nonlocal sfl, sched_eff
+        r0 = segments[seg_idx][0]
+        window = None
+        if seg_idx > 0:
+            p0, p1 = segments[seg_idx - 1]
+            i0, i1 = p0 - start_round, p1 - start_round
+            window = SchedWindow(
+                p0, p1,
+                np.stack([sched_eff.delays[rr % R] for rr in range(p0, p1)]),
+                time_masks[i0:i1], sched_eff.t_server, sched_eff.t_comm)
+        upd = controller.update(r0, window, last_info) or {}
+        changed = {k: v for k, v in upd.items() if getattr(sfl, k) != v}
+        if not changed:
+            return
+        applied.update(changed)
+        sfl = dataclasses.replace(sfl, **changed)
+        i = r0 - start_round
+        if "deadline" in changed:
+            nd = np.stack([strag.deadline_mask(sched_eff.delays[j],
+                                               sfl.deadline)
+                           for j in range(R)])
+            sched_eff = dataclasses.replace(
+                sched_eff, deadline=nd, masks=sched_eff.participation * nd)
+            for j, rr in enumerate(rows[i:], start=i):
+                masks[j] = mask_of(sched_eff, rr)
+                time_masks[j] = sched_eff.masks[rr % R]
+        for j, rr in enumerate(rows[i:], start=i):
+            round_times[j] = algo.time_model(sched_eff.delays[rr % R],
+                                             time_masks[j], sfl, sched_eff)
+        tau_used[i:] = sfl.tau
 
     if mode == "python":
-        round_jit = _cached_jit(algo, "python", cfg, sfl, lambda: jax.jit(
-            lambda p, s, b, m, k: algo.round_fn(cfg, sfl, p, s, b, m, k)))
-        for i, r in enumerate(rows):
-            b = jax.tree.map(jnp.asarray, batch_fn(r))
-            params, state, met = round_jit(params, state, b,
-                                           jnp.asarray(masks[i]), keys[i])
-            flush(jax.tree.map(lambda a: a[None], met), r, r + 1)
-            if (checkpointer is not None and ckpt_every
-                    and (r + 1) % ckpt_every == 0 and r + 1 < rounds):
-                checkpointer.save(r, params)
+        for si, (r0, r1) in enumerate(segments):
+            if controller is not None:
+                controller_step(si)
+            round_jit = _cached_jit(
+                algo, "python", cfg, sfl,
+                lambda sfl=sfl: jax.jit(lambda p, s, b, m, k: algo.round_fn(
+                    cfg, sfl, p, s, b, m, k)))
+            for rr in range(r0, r1):
+                i = rr - start_round
+                b = jax.tree.map(jnp.asarray, batch_fn(rr))
+                params, state, met = round_jit(params, state, b,
+                                               jnp.asarray(masks[i]), keys[i])
+                flush(jax.tree.map(lambda a: a[None], met), rr, rr + 1)
+                if (checkpointer is not None and ckpt_every
+                        and (rr + 1) % ckpt_every == 0 and rr + 1 < rounds):
+                    checkpointer.save(rr, _ckpt_tree(params, state),
+                                      metadata=ckpt_meta())
+            if controller is not None and r1 - r0 > 1:
+                # controllers see the whole segment's metrics, exactly as
+                # in scan mode (flush above is per round here)
+                last_info = seg_info(r0, r1)
     else:
         params, state = _copy_tree(params), _copy_tree(state)
-        chunk_jit = _cached_jit(algo, "scan", cfg, sfl, lambda: jax.jit(
-            make_chunk_fn(algo, cfg, sfl), donate_argnums=(0, 1)))
-        r = start_round
-        while r < rounds:
-            C = min(chunk_size, rounds - r)
-            if ckpt_every:
-                C = min(C, ckpt_every - r % ckpt_every)
-            i = r - start_round
+        for si, (r0, r1) in enumerate(segments):
+            if controller is not None:
+                controller_step(si)
+            chunk_jit = _cached_jit(
+                algo, "scan", cfg, sfl,
+                lambda sfl=sfl: jax.jit(make_chunk_fn(algo, cfg, sfl),
+                                        donate_argnums=(0, 1)))
+            i, C = r0 - start_round, r1 - r0
             params, state, mets = chunk_jit(
-                params, state, _stack_chunk(batch_fn, r, C),
+                params, state, _stack_chunk(batch_fn, r0, C),
                 jnp.asarray(masks[i:i + C]), keys[i:i + C])
-            r += C
-            flush(mets, r - C, r)
+            flush(mets, r0, r1)
             if (checkpointer is not None and ckpt_every
-                    and r % ckpt_every == 0 and r < rounds):
-                checkpointer.save(r - 1, params)
+                    and r1 % ckpt_every == 0 and r1 < rounds):
+                checkpointer.save(r1 - 1, _ckpt_tree(params, state),
+                                  metadata=ckpt_meta())
 
-    metrics = {k: np.concatenate([c[k] for c in chunks])
-               for k in chunks[0]}
+    def _cat(k2):
+        arrs = [c[k2] for c in chunks]
+        shapes = {a.shape[1:] for a in arrs}
+        if len(shapes) > 1:     # controller changed τ: pad trailing axes
+            full = tuple(max(dims) for dims in zip(*shapes))
+            arrs = [np.pad(a, [(0, 0)] + [(0, t - s) for s, t
+                                          in zip(a.shape[1:], full)])
+                    for a in arrs]
+        return np.concatenate(arrs)
+
+    metrics = {k2: _cat(k2) for k2 in chunks[0]}
     loss = metrics["loss"]
     round_loss = ((loss * masks).sum(1)
                   / np.maximum(masks.sum(1), 1.0)).astype(np.float64)
     if checkpointer is not None:
-        checkpointer.save(rounds - 1, params,
-                          metadata={"loss": float(round_loss[-1])}, block=True)
+        checkpointer.save(rounds - 1, _ckpt_tree(params, state),
+                          metadata=ckpt_meta(loss=float(round_loss[-1])),
+                          block=True)
     return EngineResult(params, state, metrics, round_loss,
-                        round_times, float(round_times.sum()))
+                        round_times, float(round_times.sum()), tau_used)

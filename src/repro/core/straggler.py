@@ -15,34 +15,16 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.core.population import (ClientPopulation, Cohort, DelayModel,
+                                   parse_population)
+
 __all__ = [
-    "DelayModel", "Schedule", "make_schedule", "participation_mask",
+    "DelayModel", "Cohort", "ClientPopulation", "parse_population",
+    "Schedule", "make_schedule", "participation_mask",
     "deadline_mask", "median_fresh_mask", "plan_tau",
     "round_time_mu_splitfed", "round_time_vanilla", "round_time_gas",
     "round_time_local_only", "WallClock", "simulate_total_time",
 ]
-
-
-@dataclasses.dataclass(frozen=True)
-class DelayModel:
-    """Per-round client compute times (seconds, simulated).
-
-    t_m = base * (1 + Exp(scale))  — heterogeneous, heavy-tailed (paper §5
-    follows [8,12] and samples from an exponential distribution).
-    ``hetero`` optionally fixes a per-client speed multiplier (systematic
-    stragglers rather than purely stochastic ones).
-    """
-    base: float = 1.0
-    scale: float = 1.0
-    hetero: Optional[Tuple[float, ...]] = None
-
-    def sample(self, rng: np.random.Generator, n_clients: int,
-               n_rounds: int) -> np.ndarray:
-        t = self.base * (1.0 + rng.exponential(self.scale,
-                                               size=(n_rounds, n_clients)))
-        if self.hetero is not None:
-            t = t * np.asarray(self.hetero)[None, :]
-        return t
 
 
 def participation_mask(rng: np.random.Generator, n_clients: int,
@@ -91,13 +73,17 @@ class Schedule:
     round math never blocks on the host simulator. All arrays are (R, M):
 
       delays         per-round client compute times (seconds, simulated)
-      participation  0/1 random-participation draw
+      participation  0/1 availability·participation draw (per cohort)
       deadline       0/1 deadline survivors (all-ones when deadline <= 0)
       masks          participation * deadline — what the round consumes
       fresh_median   GAS freshness rule (<= per-round median delay)
 
     t_server / t_gen / t_comm are the scalar wall-clock model knobs; the
     per-algorithm round-time models read them through this object.
+    ``t_comm_scale`` ((M,), optional) carries per-client uplink multipliers
+    from a heterogeneous population — ``comm_for(mask)`` charges the round
+    the slowest *active* link; ``population`` records the fleet spec the
+    schedule was sampled from.
     """
     delays: np.ndarray
     participation: np.ndarray
@@ -108,6 +94,8 @@ class Schedule:
     t_server: float = 0.1
     t_gen: float = 0.0
     t_comm: float = 0.0
+    t_comm_scale: Optional[np.ndarray] = None
+    population: Optional[ClientPopulation] = None
 
     @property
     def n_rounds(self) -> int:
@@ -122,8 +110,18 @@ class Schedule:
         i = r % self.n_rounds
         return self.delays[i], self.masks[i]
 
+    def comm_for(self, mask: np.ndarray) -> float:
+        """Per-round communication time under ``mask``: t_comm scaled by the
+        slowest active client's uplink (uniform fleets: just t_comm)."""
+        if self.t_comm_scale is None or self.t_comm == 0.0:
+            return self.t_comm
+        active = self.t_comm_scale[np.asarray(mask) > 0]
+        return self.t_comm * (float(active.max()) if active.size else 1.0)
 
-def make_schedule(seed: int, n_rounds: int, n_clients: int, *,
+
+def make_schedule(seed: int, n_rounds: int, n_clients: Optional[int] = None,
+                  *,
+                  population: Optional[ClientPopulation] = None,
                   delay_model: Optional[DelayModel] = None,
                   straggler_scale: float = 0.0,
                   participation: float = 1.0,
@@ -133,27 +131,43 @@ def make_schedule(seed: int, n_rounds: int, n_clients: int, *,
                   t_comm: float = 0.0) -> Schedule:
     """Precompute the whole system-model trace as stacked (R, M) arrays.
 
-    Deterministic in (seed, n_rounds, n_clients, knobs). The per-round RNG
-    draw order is exactly the historical per-round scalar path of the
-    training driver — delays first (only when the delay model is
-    heterogeneous), then the participation draw — so a schedule row r
-    reproduces what round r of the old Python loop would have sampled
-    (tests/test_engine.py pins this).
+    The fleet is a ClientPopulation: delays, availability (iid draws or
+    Markov up/down chains), and participation are sampled per cohort. The
+    legacy scalar knobs (``delay_model``/``straggler_scale``/
+    ``participation``) are the deprecated single-cohort shorthand — they
+    resolve to ``ClientPopulation.single`` and, because the per-cohort
+    sampler consumes the RNG in the historical order (delay draw first,
+    only when stochastic, then the participation draw, cohort by cohort),
+    a single-iid-cohort population reproduces the old per-round scalar
+    path bit-for-bit (tests/test_engine.py + tests/test_population.py pin
+    this). Deterministic in (seed, n_rounds, population, knobs).
     """
-    dm = delay_model or DelayModel(base=1.0, scale=straggler_scale)
+    if population is None:
+        if n_clients is None:
+            raise ValueError("make_schedule: pass n_clients or population")
+        population = ClientPopulation.single(
+            n_clients,
+            delay=delay_model or DelayModel(base=1.0, scale=straggler_scale),
+            participation=participation)
+    elif n_clients is not None and n_clients != population.n_clients:
+        raise ValueError(f"n_clients={n_clients} != population's "
+                         f"{population.n_clients}")
+    M = population.n_clients
     rng = np.random.default_rng(seed)
-    stochastic = dm.scale > 0 or dm.hetero is not None
-    delays = np.empty((n_rounds, n_clients), np.float64)
-    parts = np.empty((n_rounds, n_clients), np.float32)
+    sampler = population.sampler()
+    delays = np.empty((n_rounds, M), np.float64)
+    parts = np.empty((n_rounds, M), np.float32)
     for r in range(n_rounds):
-        delays[r] = (dm.sample(rng, n_clients, 1)[0] if stochastic
-                     else np.full((n_clients,), dm.base))
-        parts[r] = participation_mask(rng, n_clients, participation)
+        delays[r] = sampler.delays_row(rng)
+        parts[r] = sampler.participation_row(rng)
     dead = np.stack([deadline_mask(delays[r], deadline)
                      for r in range(n_rounds)])
     return Schedule(delays=delays, participation=parts, deadline=dead,
                     masks=parts * dead, fresh_median=median_fresh_mask(delays),
-                    seed=seed, t_server=t_server, t_gen=t_gen, t_comm=t_comm)
+                    seed=seed, t_server=t_server, t_gen=t_gen, t_comm=t_comm,
+                    t_comm_scale=(None if population.uniform_comm
+                                  else population.t_comm_scales()),
+                    population=population)
 
 
 # ---------------------------------------------------------------------------

@@ -77,21 +77,36 @@ def zo_perturb_tree(params: Any, seed, eps, *, interpret=None) -> Any:
 # batched seed replay (perf-ladder v4 hot path)
 # ---------------------------------------------------------------------------
 
+# zo_replay_flat keeps (seeds, coeffs) in SMEM: 8 B per record. SMEM is
+# tens of KiB per core, so the record list is bounded — past this many
+# records the ops layer splits the list and sweeps the leaf once per
+# chunk (ceil(N/bound) sweeps) instead of failing at lowering.
+REPLAY_SMEM_RECORDS = 2048            # 2048 × 8 B = 16 KiB of SMEM
+
+
 def zo_replay_leaf(x: jnp.ndarray, seeds, coeffs, *, row_offset: int = 0,
-                   impl: str = "auto", interpret=None) -> jnp.ndarray:
+                   impl: str = "auto", interpret=None,
+                   max_records: int = 0) -> jnp.ndarray:
     """y = x + Σᵢ coeffs[i]·u(seeds[i]) for an arbitrary-shaped leaf —
-    one read + one write of x regardless of N.
+    one read + one write of x regardless of N, as long as the (seeds,
+    coeffs) list fits the kernel's SMEM budget. Longer lists (N = M·τ·P
+    past ``REPLAY_SMEM_RECORDS``) are chunked here at the ops layer: each
+    chunk is one fused sweep, so an oversized replay costs ceil(N/bound)
+    parameter sweeps rather than a lowering failure.
 
     impl='auto' picks the compiled Pallas kernel on TPU and the pure-JAX
     reference elsewhere (an interpret-mode Pallas sweep over N records is
     needlessly slow on CPU); 'pallas'/'ref' force a backend for the
-    equivalence tests."""
+    equivalence tests. ``max_records`` overrides the SMEM bound (tests)."""
     if impl == "auto":
         impl = "pallas" if on_tpu() else "ref"
     if impl == "ref":
         return _ref.zo_replay_ref(x, seeds, coeffs, row_offset=row_offset)
     assert impl == "pallas", impl
     interpret = _auto_interpret(interpret)
+    seeds = jnp.asarray(seeds, jnp.uint32).reshape(-1)
+    coeffs = jnp.asarray(coeffs, jnp.float32).reshape(-1)
+    bound = max_records or REPLAY_SMEM_RECORDS
     n = x.size
     rows = -(-n // LANE)
     # pad the row count to a whole number of grid blocks (the extra rows
@@ -99,9 +114,10 @@ def zo_replay_leaf(x: jnp.ndarray, seeds, coeffs, *, row_offset: int = 0,
     block = min(BLOCK_ROWS, rows)
     rows = -(-rows // block) * block
     flat = jnp.pad(x.reshape(-1), (0, rows * LANE - n)).reshape(rows, LANE)
-    out = zo_replay_flat(flat, seeds, coeffs, offset=row_offset,
-                         interpret=interpret)
-    return out.reshape(-1)[:n].reshape(x.shape)
+    for i in range(0, seeds.shape[0], bound):
+        flat = zo_replay_flat(flat, seeds[i:i + bound], coeffs[i:i + bound],
+                              offset=row_offset, interpret=interpret)
+    return flat.reshape(-1)[:n].reshape(x.shape)
 
 
 # ---------------------------------------------------------------------------

@@ -74,10 +74,15 @@ def zo_update_ref(x: jnp.ndarray, seed, coeff, row_offset: int = 0
             ).astype(x.dtype)
 
 
-# unrolled-accumulation cutoff: below it the N noise regenerations fuse into
-# one elementwise XLA fusion (one read of x, one write of y); above it a
-# lax.scan bounds code size while still touching x only once.
-_REPLAY_UNROLL = 128
+# windowed-accumulation width: the Σ cᵢ·uᵢ accumulator is built as a
+# lax.scan over windows of this many unrolled records. A flat N-record
+# unroll fuses into one giant elementwise XLA fusion whose live noise
+# temporaries scale with N (32.2 GB temp at N=32 on the fake 16×16 CPU
+# mesh — perf_iterations.json v5 vs v5.1); the windowed scan bounds the
+# fusion (and the temp footprint) at WINDOW records while still touching
+# x exactly once. Accumulation order is identical to the sequential
+# record order, so results are bit-identical to the old flat unroll.
+_REPLAY_WINDOW = 8
 
 
 def zo_replay_ref(x: jnp.ndarray, seeds, coeffs, row_offset: int = 0
@@ -87,25 +92,36 @@ def zo_replay_ref(x: jnp.ndarray, seeds, coeffs, row_offset: int = 0
     Matches zo_replay_flat (and N sequential zo_update_ref applications up
     to f32 summation order): the Σ cᵢ·uᵢ accumulator is built elementwise
     BEFORE x is touched, so the parameter leaf is read and written exactly
-    once regardless of N."""
+    once regardless of N. Above _REPLAY_WINDOW records the accumulation
+    runs as a scan of WINDOW-record unrolled windows (records padded with
+    zero coefficients to a whole window)."""
     seeds = jnp.asarray(seeds, jnp.uint32).reshape(-1)
     coeffs = jnp.asarray(coeffs, jnp.float32).reshape(-1)
+    n = seeds.shape[0]
     n_el = x.size
     rows = -(-n_el // LANE)
     hi = ((jnp.arange(rows, dtype=jnp.uint32) + jnp.uint32(row_offset))
           [:, None] + jnp.zeros((rows, LANE), jnp.uint32))
     lo = jnp.broadcast_to(jnp.arange(LANE, dtype=jnp.uint32)[None, :],
                           (rows, LANE))
-    if seeds.shape[0] <= _REPLAY_UNROLL:
+    W = _REPLAY_WINDOW
+    if n <= W:
         acc = jnp.zeros((rows, LANE), jnp.float32)
-        for i in range(seeds.shape[0]):
+        for i in range(n):
             acc = acc + coeffs[i] * counter_gauss2(seeds[i], hi, lo)
     else:
+        pad = (-n) % W                 # zero-coeff records contribute +0
+        gs = jnp.pad(seeds, (0, pad)).reshape(-1, W)
+        gc = jnp.pad(coeffs, (0, pad)).reshape(-1, W)
+
         def body(acc, sc):
             s, c = sc
-            return acc + c * counter_gauss2(s, hi, lo), None
+            for j in range(W):
+                acc = acc + c[j] * counter_gauss2(s[j], hi, lo)
+            return acc, None
+
         acc, _ = jax.lax.scan(body, jnp.zeros((rows, LANE), jnp.float32),
-                              (seeds, coeffs))
+                              (gs, gc))
     acc = acc.reshape(-1)[:n_el].reshape(x.shape)
     return (x.astype(jnp.float32) + acc).astype(x.dtype)
 

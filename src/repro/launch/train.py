@@ -45,6 +45,19 @@ def main(argv=None):
     ap.add_argument("--participation", type=float, default=1.0)
     ap.add_argument("--straggler-scale", type=float, default=0.0)
     ap.add_argument("--deadline", type=float, default=0.0)
+    ap.add_argument("--population", default="",
+                    help="heterogeneous fleet spec, e.g. "
+                         "'tiered:4x1.0,12x0.2' — per cohort "
+                         "<n>x<speed>[@part][~p_drop/p_recover][%%comm_scale]"
+                         "; overrides --clients/--participation (the "
+                         "deprecated single-cohort shorthand); "
+                         "--straggler-scale becomes the shared jitter")
+    ap.add_argument("--adaptive-tau", action="store_true",
+                    help="re-plan tau at chunk boundaries from the observed "
+                         "straggler gap (engine.AdaptiveTau; --tau is the "
+                         "starting point)")
+    ap.add_argument("--tau-max", type=int, default=64,
+                    help="cap for --adaptive-tau's planner")
     ap.add_argument("--t-server", type=float, default=0.1,
                     help="simulated server step time (s) for the wall-clock "
                          "model")
@@ -70,10 +83,20 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    sfl = SFLConfig(n_clients=args.clients, tau=args.tau,
+    # the client fleet: an explicit heterogeneous population, or the
+    # deprecated scalar shorthand resolved to a single cohort
+    population = (strag.parse_population(
+        args.population, straggler_scale=args.straggler_scale)
+        if args.population else None)
+    n_clients = population.n_clients if population else args.clients
+    if population is not None:
+        print(f"population: {population.describe()}  (M={n_clients})")
+    sfl = SFLConfig(n_clients=n_clients, tau=args.tau,
                     cut_units=args.cut or cfg.default_cut_units,
                     lr_server=args.lr_server, lr_client=args.lr_client,
-                    participation=args.participation)
+                    participation=args.participation,
+                    straggler_rate=args.straggler_scale,
+                    deadline=args.deadline, population=population)
     key = jax.random.PRNGKey(args.seed)
     params = untie_params(cfg, init_params(cfg, key))
 
@@ -82,34 +105,41 @@ def main(argv=None):
     ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
                      seed=args.seed)
     pseudo_labels = np.arange(n_samples) % 10
-    parts = dirichlet_partition(pseudo_labels, args.clients, alpha=0.5,
+    parts = dirichlet_partition(pseudo_labels, n_clients, alpha=0.5,
                                 seed=args.seed)
     loader = FederatedLoader(ds, parts, args.batch, seed=args.seed)
-
-    # fault tolerance: resume if a checkpoint exists
-    ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
-    start_round = 0
-    if ck is not None:
-        from repro.ckpt import latest_step
-        step = latest_step(args.ckpt_dir)
-        if step is not None:
-            params, meta = ck.restore(params, step)
-            start_round = meta["step"] + 1
-            print(f"[resume] from round {start_round}")
-
-    # the whole system model — delays, participation, deadline drops — as
-    # precomputed (R, M) data the engine scans
-    sched = strag.make_schedule(
-        args.seed, args.rounds, args.clients,
-        straggler_scale=args.straggler_scale,
-        participation=args.participation, deadline=args.deadline,
-        t_server=args.t_server, t_gen=args.t_gen, t_comm=args.t_comm)
 
     algo = engine.get_algorithm(args.algorithm, **(
         {"client_mode": args.client_mode, "aggregation": args.aggregation}
         if args.algorithm in ("mu_splitfed", "vanilla")
         else {"aggregation": args.aggregation}
         if args.algorithm == "gas" else {}))
+
+    controller = (engine.AdaptiveTau(tau_max=args.tau_max)
+                  if args.adaptive_tau else None)
+
+    # fault tolerance: resume if a checkpoint exists (engine state —
+    # e.g. the GAS activation buffer — rides along in the bundle, and
+    # controller decisions/EMA state replay from the metadata)
+    ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    start_round, state = 0, None
+    if ck is not None:
+        from repro.ckpt import latest_step
+        if latest_step(args.ckpt_dir) is not None:
+            params, state, meta = engine.restore_run(
+                ck, algo, cfg, sfl, params, loader.round_batch)
+            sfl = engine.apply_resume_overrides(sfl, meta, controller)
+            start_round = meta["step"] + 1
+            print(f"[resume] from round {start_round} (tau={sfl.tau})")
+
+    # the whole system model — per-cohort delays, availability chains,
+    # participation, deadline drops — as precomputed (R, M) data the
+    # engine scans
+    sched = strag.make_schedule(
+        args.seed, args.rounds, population=strag.ClientPopulation.resolve(sfl),
+        deadline=args.deadline,
+        t_server=args.t_server, t_gen=args.t_gen, t_comm=args.t_comm)
+
     wall = strag.WallClock()
     t0 = time.time()
 
@@ -117,14 +147,19 @@ def main(argv=None):
         for i, r in enumerate(range(info.start, info.stop)):
             sim_t = wall.tick(info.round_times[i])
             print(f"round {r:4d}  loss {info.round_loss[i]:.4f}  active "
-                  f"{int(info.masks[i].sum())}/{args.clients}  "
+                  f"{int(info.masks[i].sum())}/{n_clients}  "
                   f"wall {time.time()-t0:.1f}s  sim_t {sim_t:.1f}")
 
     result = engine.run_rounds(
         algo, cfg, sfl, params, loader.round_batch, sched, key,
-        rounds=args.rounds, start_round=start_round,
+        rounds=args.rounds, start_round=start_round, state=state,
         chunk_size=args.chunk_size, mode=args.loop, checkpointer=ck,
-        ckpt_every=args.ckpt_every, chunk_callback=on_chunk)
+        ckpt_every=args.ckpt_every, chunk_callback=on_chunk,
+        controller=controller)
+    if controller is not None and controller.trace:
+        taus = [t for _, t in controller.trace]
+        print(f"adaptive tau: start {args.tau} -> final {taus[-1]} "
+              f"(decisions: {taus})")
     return result.params
 
 

@@ -140,6 +140,35 @@ def test_resume_bit_identical(setup):
     assert maxdiff(full.params, part2.params) == 0.0
 
 
+def test_gas_resume_exact_with_state(setup):
+    """Stateful algorithms checkpoint their engine state alongside params
+    ({'params','state'} bundle): a killed-and-resumed GAS run must be
+    BIT-identical to an uninterrupted one — the activation buffer is
+    restored, not re-initialized from the first resumed batch."""
+    cfg, params, sfl, sched, batch_fn, key = setup
+    R, C = 6, 2
+    full = engine.run_rounds("gas", cfg, sfl, params, batch_fn, sched, key,
+                             rounds=R, mode="scan", chunk_size=C)
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        part1 = engine.run_rounds("gas", cfg, sfl, params, batch_fn, sched,
+                                  key, rounds=4, mode="scan", chunk_size=C,
+                                  checkpointer=ck, ckpt_every=C)
+        ck.wait()
+        p2, s2, meta = engine.restore_run(ck, "gas", cfg, sfl, params,
+                                          batch_fn)
+        assert meta["step"] == 3
+        assert meta["metadata"]["has_state"] is True
+        assert maxdiff(s2, part1.state) == 0.0     # buffer round-tripped
+        part2 = engine.run_rounds("gas", cfg, sfl, p2, batch_fn, sched, key,
+                                  rounds=R, start_round=meta["step"] + 1,
+                                  state=s2, mode="scan", chunk_size=C)
+    resumed = np.concatenate([part1.round_loss, part2.round_loss])
+    assert np.array_equal(full.round_loss, resumed)
+    assert maxdiff(full.params, part2.params) == 0.0
+    assert maxdiff(full.state, part2.state) == 0.0
+
+
 def test_fresh_median_rule():
     d = np.array([[1.0, 5.0, 2.0, 9.0]])
     m = strag.median_fresh_mask(d)

@@ -1,0 +1,254 @@
+"""ClientPopulation API: single-cohort bit-compatibility with the legacy
+scalar schedules, per-seed Markov determinism, cohort composition, the CLI
+grammar, and the AdaptiveTau controller's convergence to the static
+plan_tau answer."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_lm_cfg
+from repro.configs import SFLConfig
+from repro.core import engine
+from repro.core import straggler as strag
+from repro.core.population import (ClientPopulation, Cohort, DelayModel,
+                                   parse_population)
+from repro.models import init_params, untie_params
+
+
+# ---------------------------------------------------------------------------
+# single-cohort shorthand == legacy scalar path, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_single_cohort_reproduces_legacy_schedule():
+    """The deprecated scalar knobs and an explicit single-iid-cohort
+    population must consume the RNG identically: every schedule array is
+    bit-for-bit equal."""
+    legacy = strag.make_schedule(7, 12, 5, straggler_scale=1.5,
+                                 participation=0.6, deadline=3.0)
+    pop = ClientPopulation.single(5, straggler_scale=1.5, participation=0.6)
+    via_pop = strag.make_schedule(7, 12, population=pop, deadline=3.0)
+    for f in ("delays", "participation", "deadline", "masks", "fresh_median"):
+        assert np.array_equal(getattr(legacy, f), getattr(via_pop, f)), f
+
+
+def test_resolve_path_from_sfl_scalars():
+    """ClientPopulation.resolve(sfl) on a scalar-knob config is the same
+    single cohort the shorthand builds."""
+    sfl = SFLConfig(n_clients=6, straggler_rate=2.0, participation=0.5)
+    pop = ClientPopulation.resolve(sfl)
+    assert pop == ClientPopulation.single(6, straggler_scale=2.0,
+                                          participation=0.5)
+    # explicit population wins over the scalars
+    tiered = parse_population("tiered:3x1.0,3x0.5")
+    sfl2 = dataclasses.replace(sfl, population=tiered)
+    assert ClientPopulation.resolve(sfl2) is tiered
+
+
+def test_resolve_rejects_client_count_mismatch():
+    pop = parse_population("tiered:2x1.0,2x0.5")
+    with pytest.raises(ValueError, match="population has 4"):
+        ClientPopulation.resolve(SFLConfig(n_clients=8, population=pop))
+
+
+def test_population_is_hashable_config():
+    """Populations sit inside SFLConfig, which jit treats as a static arg —
+    they must hash and compare like any frozen config."""
+    a = parse_population("tiered:2x1.0,2x0.5")
+    b = parse_population("tiered:2x1.0,2x0.5")
+    assert a == b and hash(a) == hash(b)
+    assert hash(SFLConfig(n_clients=4, population=a)) == hash(
+        SFLConfig(n_clients=4, population=b))
+
+
+# ---------------------------------------------------------------------------
+# cohort composition + markov availability
+# ---------------------------------------------------------------------------
+
+def test_cohort_composition_vectors():
+    pop = ClientPopulation(cohorts=(
+        Cohort(name="fast", n=2, delay=DelayModel(base=0.5, scale=0.0)),
+        Cohort(name="slow", n=3, delay=DelayModel(base=4.0, scale=0.0),
+               t_comm_scale=4.0),
+    ))
+    assert pop.n_clients == 5
+    assert pop.cohort_ids().tolist() == [0, 0, 1, 1, 1]
+    assert pop.t_comm_scales().tolist() == [1.0, 1.0, 4.0, 4.0, 4.0]
+    sched = strag.make_schedule(0, 3, population=pop, t_comm=0.1)
+    # deterministic per-cohort delays land in the right client slots
+    assert np.array_equal(sched.delays,
+                          np.tile([0.5, 0.5, 4.0, 4.0, 4.0], (3, 1)))
+    # comm time is bounded by the slowest ACTIVE uplink
+    assert sched.comm_for(np.array([1, 1, 0, 0, 0])) == pytest.approx(0.1)
+    assert sched.comm_for(np.array([1, 1, 1, 0, 0])) == pytest.approx(0.4)
+
+
+def test_markov_availability_deterministic_per_seed():
+    pop = ClientPopulation(cohorts=(
+        Cohort(name="m", n=4, delay=DelayModel(base=1.0, scale=0.0),
+               availability="markov", p_dropout=0.3, p_recover=0.4),))
+    a = strag.make_schedule(11, 30, population=pop)
+    b = strag.make_schedule(11, 30, population=pop)
+    assert np.array_equal(a.participation, b.participation)
+    c = strag.make_schedule(12, 30, population=pop)
+    assert not np.array_equal(a.participation, c.participation)
+    # the chain actually visits both states
+    assert 0.0 < a.participation.mean() < 1.0
+
+
+def test_markov_chain_alternates_deterministically():
+    """p_dropout = p_recover = 1 flips every client every round (the chain
+    starts all-up and transitions before round 0 is read)."""
+    pop = ClientPopulation(cohorts=(
+        Cohort(name="m", n=2, delay=DelayModel(base=1.0, scale=0.0),
+               availability="markov", p_dropout=1.0, p_recover=1.0),))
+    sched = strag.make_schedule(0, 4, population=pop)
+    assert sched.participation.tolist() == [[0, 0], [1, 1], [0, 0], [1, 1]]
+
+
+def test_markov_never_drops_when_p_dropout_zero():
+    """p_dropout = 0 keeps every chain client up forever — the chain draws
+    still consume RNG (determinism) but availability is all-ones."""
+    pop = ClientPopulation(cohorts=(
+        Cohort(name="m", n=3, delay=DelayModel(base=1.0, scale=0.0),
+               availability="markov", p_dropout=0.0, p_recover=0.5),))
+    sched = strag.make_schedule(5, 10, population=pop)
+    assert np.array_equal(sched.participation, np.ones((10, 3), np.float32))
+
+
+def test_parse_population_grammar():
+    pop = parse_population("tiered:4x1.0,12x0.2@0.5~0.05/0.2%4",
+                           straggler_scale=0.7)
+    assert [c.n for c in pop.cohorts] == [4, 12]
+    fast, slow = pop.cohorts
+    assert fast.delay == DelayModel(base=1.0, scale=0.7)
+    assert slow.delay.base == pytest.approx(5.0)
+    assert slow.participation == 0.5
+    assert (slow.availability, slow.p_dropout, slow.p_recover) == \
+        ("markov", 0.05, 0.2)
+    assert slow.t_comm_scale == 4.0
+    with pytest.raises(ValueError, match="bad cohort spec"):
+        parse_population("tiered:fastx1.0")
+    with pytest.raises(ValueError, match="speed"):
+        parse_population("tiered:4x0")
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveTau: converges to plan_tau's static answer when stationary
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = tiny_lm_cfg(dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = untie_params(cfg, init_params(cfg, key))
+
+    def batch_fn(r):
+        k = jax.random.fold_in(jax.random.PRNGKey(5), r)
+        t = jax.random.randint(k, (4, 1, 16), 0, cfg.vocab_size)
+        return {"tokens": t, "labels": t}
+
+    return cfg, params, batch_fn, key
+
+
+def test_adaptive_tau_converges_to_plan_tau(tiny_setup):
+    """On a stationary population (deterministic delays) the controller's
+    decision must land on plan_tau's static answer after the first observed
+    window and stay there."""
+    cfg, params, batch_fn, key = tiny_setup
+    t_server, base = 0.25, 2.0
+    pop = ClientPopulation(cohorts=(
+        Cohort(name="all", n=4, delay=DelayModel(base=base, scale=0.0)),))
+    sfl = SFLConfig(n_clients=4, tau=1, cut_units=1, lr_server=5e-3,
+                    lr_client=1e-3, lr_global=1.0, population=pop)
+    sched = strag.make_schedule(0, 8, population=pop, t_server=t_server)
+    ctl = engine.AdaptiveTau(tau_max=64)
+    res = engine.run_rounds("mu_splitfed", cfg, sfl, params, batch_fn,
+                            sched, key, rounds=8, chunk_size=2,
+                            controller=ctl)
+    want = strag.plan_tau(base, t_server)          # = 8
+    assert [tau for _, tau in ctl.trace] == [want] * 3
+    assert res.tau_per_round.tolist() == [1, 1] + [want] * 6
+    # Thm 4.1 lr coupling: η_s·τ invariant under the re-plan
+    assert ctl._eta_step == pytest.approx(5e-3 * 1)
+    # wall-clock rows reflect the applied τ (Eq. 12 round time)
+    assert res.round_times[0] == pytest.approx(max(base, 1 * t_server))
+    assert res.round_times[-1] == pytest.approx(max(base, want * t_server))
+
+
+def test_adaptive_tau_resume_replays_overrides(tiny_setup, tmp_path):
+    """Checkpoints record the controller's applied overrides + EMA state;
+    apply_resume_overrides replays them so a resumed adaptive run
+    continues at the adapted τ/η_s instead of restarting from the CLI
+    values."""
+    from repro.ckpt import Checkpointer
+    cfg, params, batch_fn, key = tiny_setup
+    t_server, base = 0.25, 2.0
+    pop = ClientPopulation(cohorts=(
+        Cohort(name="all", n=4, delay=DelayModel(base=base, scale=0.0)),))
+    sfl = SFLConfig(n_clients=4, tau=1, cut_units=1, lr_server=5e-3,
+                    lr_client=1e-3, lr_global=1.0, population=pop)
+    sched = strag.make_schedule(0, 8, population=pop, t_server=t_server)
+    ck = Checkpointer(str(tmp_path))
+    ctl = engine.AdaptiveTau(tau_max=64)
+    engine.run_rounds("mu_splitfed", cfg, sfl, params, batch_fn, sched, key,
+                      rounds=4, chunk_size=2, controller=ctl,
+                      checkpointer=ck, ckpt_every=2)
+    p2, s2, meta = engine.restore_run(ck, "mu_splitfed", cfg, sfl, params,
+                                      batch_fn)
+    assert s2 is None                      # stateless: params-only ckpt
+    ctl2 = engine.AdaptiveTau(tau_max=64)
+    sfl2 = engine.apply_resume_overrides(sfl, meta, ctl2)
+    want = strag.plan_tau(base, t_server)
+    assert sfl2.tau == want
+    assert sfl2.lr_server == pytest.approx(5e-3 / want)  # η_s·τ invariant
+    assert ctl2.t_hat == pytest.approx(base)             # EMA restored
+    res2 = engine.run_rounds("mu_splitfed", cfg, sfl2, p2, batch_fn, sched,
+                             key, rounds=8, start_round=meta["step"] + 1,
+                             chunk_size=2, controller=ctl2)
+    assert res2.tau_per_round.tolist() == [want] * 4     # no reset to τ=1
+
+
+def test_controller_scan_matches_python(tiny_setup):
+    """The controller fires on identical chunk boundaries in both loop
+    modes: trajectories, τ traces, and round times must agree."""
+    cfg, params, batch_fn, key = tiny_setup
+    pop = parse_population("tiered:2x1.0,2x0.25", straggler_scale=1.0)
+    sfl = SFLConfig(n_clients=4, tau=1, cut_units=1, lr_server=5e-3,
+                    lr_client=1e-3, lr_global=1.0, population=pop)
+    sched = strag.make_schedule(0, 6, population=pop, t_server=0.5)
+    runs = {}
+    for mode in ("python", "scan"):
+        ctl = engine.AdaptiveTau(tau_max=8)        # fresh controller state
+        runs[mode] = engine.run_rounds("mu_splitfed", cfg, sfl, params,
+                                       batch_fn, sched, key, rounds=6,
+                                       chunk_size=2, mode=mode,
+                                       controller=ctl)
+    py, sc = runs["python"], runs["scan"]
+    assert np.max(np.abs(py.round_loss - sc.round_loss)) <= 1e-5
+    assert np.array_equal(py.tau_per_round, sc.tau_per_round)
+    assert np.array_equal(py.round_times, sc.round_times)
+
+
+def test_controller_deadline_override(tiny_setup):
+    """A controller-returned deadline re-derives the straggler-drop masks
+    from the schedule's delay rows for all remaining rounds."""
+    cfg, params, batch_fn, key = tiny_setup
+    pop = ClientPopulation(cohorts=(
+        Cohort(name="fast", n=2, delay=DelayModel(base=1.0, scale=0.0)),
+        Cohort(name="slow", n=2, delay=DelayModel(base=9.0, scale=0.0)),))
+    sfl = SFLConfig(n_clients=4, tau=1, cut_units=1, lr_server=5e-3,
+                    lr_client=1e-3, lr_global=1.0, population=pop)
+    sched = strag.make_schedule(0, 6, population=pop, t_server=0.5)
+
+    class DropSlow:
+        def update(self, round_idx, window, metrics):
+            return {"deadline": 2.0}               # drops the base-9 tier
+
+    infos = []
+    engine.run_rounds("mu_splitfed", cfg, sfl, params, batch_fn, sched, key,
+                      rounds=6, chunk_size=2, controller=DropSlow(),
+                      chunk_callback=lambda info, p, s: infos.append(info))
+    consumed = np.concatenate([i.masks for i in infos])
+    assert np.array_equal(consumed, np.tile([1, 1, 0, 0], (6, 1)))

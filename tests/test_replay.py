@@ -63,15 +63,46 @@ def test_zo_replay_leaf_pallas_equals_ref_padded():
     assert float(jnp.max(jnp.abs(a - b))) <= 1e-5
 
 
-def test_zo_replay_ref_scan_branch_matches_unrolled():
-    """Above the unroll cutoff the ref switches to lax.scan — same stream."""
+def test_zo_replay_ref_windowed_scan_matches_blockwise():
+    """Above the window width the ref switches to a lax.scan of 8-record
+    unrolled windows (bounded XLA temp footprint) — same stream, same
+    sequential record order."""
     x = jax.random.normal(jax.random.PRNGKey(3), (1, LANE), jnp.float32)
-    seeds, coeffs = _records(ref._REPLAY_UNROLL + 3, salt=3)
+    seeds, coeffs = _records(16 * ref._REPLAY_WINDOW + 3, salt=3)
     big = ref.zo_replay_ref(x, seeds, coeffs)
     acc = x
     for i in range(0, seeds.shape[0], 16):
         acc = ref.zo_replay_ref(acc, seeds[i:i + 16], coeffs[i:i + 16])
     assert float(jnp.max(jnp.abs(big - acc))) <= 1e-4
+
+
+def test_zo_replay_ref_window_boundary_padding():
+    """The windowed scan (n > W, zero-coeff padded to a whole window) must
+    reproduce the sequential-order accumulation of the same records —
+    padding contributes exactly zero, only compiler-level fma fusion may
+    differ."""
+    x = jax.random.normal(jax.random.PRNGKey(12), (2, LANE), jnp.float32)
+    n = ref._REPLAY_WINDOW + 3            # ragged: exercises the padding
+    seeds, coeffs = _records(n, salt=12)
+    windowed = ref.zo_replay_ref(x, seeds, coeffs)
+    acc = jnp.zeros_like(x)
+    hi = jnp.zeros((2, LANE), jnp.uint32) + jnp.arange(2, dtype=jnp.uint32)[:, None]
+    lo = jnp.broadcast_to(jnp.arange(LANE, dtype=jnp.uint32)[None, :], (2, LANE))
+    for i in range(n):
+        acc = acc + coeffs[i] * ref.counter_gauss2(seeds[i], hi, lo)
+    assert float(jnp.max(jnp.abs(windowed - (x + acc)))) <= 1e-6
+
+
+def test_zo_replay_leaf_chunks_past_smem_bound():
+    """N past the kernel's SMEM record bound must be split at the ops
+    layer into multiple fused sweeps, not fail at lowering — forced here
+    with a tiny bound so 13 records take 4 kernel calls."""
+    x = jax.random.normal(jax.random.PRNGKey(13), (37, 11), jnp.float32)
+    seeds, coeffs = _records(13, salt=13)
+    chunked = zo_replay_leaf(x, seeds, coeffs, impl="pallas",
+                             interpret=True, max_records=4)
+    want = zo_replay_leaf(x, seeds, coeffs, impl="ref")
+    assert float(jnp.max(jnp.abs(chunked - want))) <= 1e-5
 
 
 # ---------------------------------------------------------------------------
