@@ -48,25 +48,36 @@ def run_mu_splitfed_result(cfg, params, ds, parts, key, *, M, tau, cut,
                            lr_global=1.0, participation=1.0, population=None,
                            controller=None, straggler_scale=0.0,
                            t_server=0.1, t_comm=0.0, seed=0,
-                           chunk_size=8) -> engine.EngineResult:
-    """Full EngineResult for one MU-SplitFed run (engine, fused scan).
+                           chunk_size=8, algorithm="mu_splitfed",
+                           mode="scan", aggregation=None, quorum=0,
+                           staleness_discount=1.0) -> engine.EngineResult:
+    """Full EngineResult for one MU-SplitFed-family run through the engine.
 
     The fleet resolves through the one ClientPopulation.resolve path: an
     explicit ``population`` (heterogeneous cohorts / Markov availability)
     or the deprecated scalar shorthand. ``controller`` (e.g.
-    engine.AdaptiveTau) re-plans τ at chunk boundaries.
+    engine.AdaptiveTau) re-plans τ at chunk boundaries. For the
+    event-driven semi-async substrate pass algorithm='async_mu_splitfed',
+    mode='async' and the quorum / staleness_discount policy knobs
+    (core/events.py); every arm of a sync-vs-async comparison then shares
+    the same schedule draw.
     """
+    if aggregation is None:         # async's record store IS seed replay
+        aggregation = ("seed_replay" if algorithm == "async_mu_splitfed"
+                       else "dense")
     sfl = SFLConfig(n_clients=M, tau=tau, cut_units=cut,
                     lr_server=lr_server, lr_client=lr_client,
                     lr_global=lr_global, participation=participation,
-                    straggler_rate=straggler_scale, population=population)
+                    straggler_rate=straggler_scale, population=population,
+                    quorum=quorum, staleness_discount=staleness_discount)
     sched = strag.make_schedule(seed, rounds,
                                 population=strag.ClientPopulation.resolve(sfl),
                                 t_server=t_server, t_comm=t_comm)
-    return engine.run_rounds("mu_splitfed", cfg, sfl, params,
+    return engine.run_rounds(algorithm, cfg, sfl, params,
                              batch_fn_for(ds, parts, batch, seed), sched, key,
                              rounds=rounds, chunk_size=chunk_size,
-                             controller=controller)
+                             mode=mode, controller=controller,
+                             aggregation=aggregation)
 
 
 def run_mu_splitfed(cfg, params, ds, parts, key, *, M, tau, cut, rounds,

@@ -174,6 +174,12 @@ class SFLConfig:
     # straggler simulation
     straggler_rate: float = 0.0     # DEPRECATED shorthand (see population)
     deadline: float = 0.0           # drop clients beyond deadline (0 = off)
+    # semi-async execution (engine mode='async', core/events.py): commit a
+    # server version once `quorum` contributions arrived (0 = wait for all
+    # pending — the synchronous barrier); a contribution applied s commits
+    # after its fetch weighs staleness_discount**s (1.0 = no discount)
+    quorum: int = 0
+    staleness_discount: float = 1.0
     # the first-class fleet spec (hashable, jit-static like the rest of
     # this config); None -> single cohort from the scalar shorthands
     population: Optional["ClientPopulation"] = None

@@ -23,7 +23,11 @@ replaces all of them:
                is also where checkpointing hooks in. mode='python' keeps
                the legacy one-jit-call-per-round loop as the equivalence
                baseline (benchmarks/bench_rounds.py gates scan == python
-               on the loss trajectory; perf ladder rung v5).
+               on the loss trajectory; perf ladder rung v5). mode='async'
+               scans the compiled event timeline instead (core/events.py):
+               quorum-committed server versions, the in-flight seed-record
+               buffer carried as engine state, staleness-discounted fused
+               replay — rung v6, gated async == scan at full quorum.
   Controller   chunk-boundary policy hook: ``update(round_idx, window,
                metrics) -> {sfl field: value}``. AdaptiveTau is the
                paper's "adaptive tuning of τ" — it re-plans τ from the
@@ -55,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, SFLConfig
+from repro.core import events
 from repro.core import straggler as strag
 from repro.core.baselines import (fedavg_round, fedlora_round, gas_init_state,
                                   gas_round, vanilla_splitfed_round)
@@ -95,24 +100,51 @@ class Algorithm(Protocol):
 
 
 ALGORITHMS: Dict[str, Callable[..., Algorithm]] = {}
+_INSTANCES: Dict[Tuple[str, Tuple], Algorithm] = {}
 
 
 def register(cls):
     ALGORITHMS[cls.name] = cls
+    # a re-registration must not leave get_algorithm serving memoized
+    # instances of the previous class under the same name
+    for k in [k for k in _INSTANCES if k[0] == cls.name]:
+        del _INSTANCES[k]
     return cls
 
 
 def get_algorithm(name: Union[str, Algorithm], **opts) -> Algorithm:
-    """Resolve an algorithm by registry name (instantiating it with
-    ``opts``) or pass a ready-made Algorithm instance through."""
+    """Resolve an algorithm by registry name or pass a ready-made Algorithm
+    instance through.
+
+    By-name resolution is MEMOIZED on (name, opts): repeated calls return
+    the same adapter instance, so the engine's per-instance jit cache
+    (keyed on mode/cfg/sfl) survives across run_rounds calls — a benchmark
+    sweep re-running the same configuration hits the compiled executables
+    instead of re-tracing a fresh adapter every run
+    (tests/test_engine.py counts the traces)."""
     if isinstance(name, str):
         if name not in ALGORITHMS:
             raise ValueError(f"unknown algorithm {name!r}; "
                              f"registered: {sorted(ALGORITHMS)}")
-        return ALGORITHMS[name](**opts)
+        k = (name, tuple(sorted(opts.items())))
+        try:
+            hash(k)
+        except TypeError:               # unhashable opt values: no memo
+            return ALGORITHMS[name](**opts)
+        if k not in _INSTANCES:
+            _INSTANCES[k] = ALGORITHMS[name](**opts)
+        return _INSTANCES[k]
     if opts:
         raise ValueError("opts only apply when resolving by name")
     return name
+
+
+def clear_algorithm_cache() -> None:
+    """Drop all memoized adapter instances (and with them their per-instance
+    compiled-executable caches). Long-lived processes sweeping many distinct
+    (cfg, sfl) configurations can call this between sweeps to release the
+    retained executables."""
+    _INSTANCES.clear()
 
 
 class AlgorithmBase:
@@ -181,6 +213,63 @@ class VanillaSplitFed(MuSplitFed):
     def metrics_spec(self, cfg, sfl):
         return {"loss": (sfl.n_clients,), "server_deltas": (sfl.n_clients, 1),
                 "client_delta": (sfl.n_clients,)}
+
+
+@register
+class AsyncMuSplitFed(MuSplitFed):
+    """Semi-async MU-SplitFed over the compiled event timeline
+    (core/events.py): the server commits a version as soon as a quorum of
+    contributions has arrived; late arrivals fold into a later commit
+    with a staleness discount, applied through the fused seed-replay path.
+    Run it with ``mode='async'`` — the quorum / discount knobs live in
+    SFLConfig (``quorum``, ``staleness_discount``). Under the sync modes
+    ('scan'/'python') it degenerates to MU-SplitFed with seed-replay
+    aggregation (its record store rides along untouched). Seed replay is
+    not optional here: the in-flight buffer IS the (key, coeff) wire
+    format — dense aggregation would mean buffering param-sized server
+    trees per client — so anything but aggregation='seed_replay' is
+    rejected rather than silently ignored."""
+    name = "async_mu_splitfed"
+
+    def __init__(self, client_mode: str = "parallel",
+                 aggregation: str = "seed_replay", replay: str = "auto",
+                 eval_loss: bool = True):
+        if client_mode != "parallel":
+            raise ValueError("async_mu_splitfed: the event-driven store "
+                             "needs stacked per-client replicas "
+                             "(client_mode='parallel')")
+        if aggregation != "seed_replay":
+            raise ValueError("async_mu_splitfed: the record store is the "
+                             "seed-replay wire format; aggregation "
+                             f"{aggregation!r} is not replayable")
+        super().__init__(client_mode=client_mode, aggregation=aggregation,
+                         replay=replay, eval_loss=eval_loss)
+
+    def init_state(self, cfg, sfl, params, batch0):
+        return events.init_store(sfl)
+
+    def async_round_fn(self, cfg, sfl, params, store, batch, start_mask,
+                       apply_w, key):
+        return events.async_mu_splitfed_step(
+            cfg, sfl, params, store, batch, start_mask, apply_w, key,
+            replay=self.replay, eval_loss=self.eval_loss)
+
+    def time_model(self, delays, mask, sfl, sched):
+        # event arrival times, not round maxima: the version ends at the
+        # last pending ARRIVAL (delay + that client's own uplink), floored
+        # by the τ·t_server server work. quorum=0 deliberately: this
+        # per-row model is only consulted by the sync fallback modes,
+        # which execute the full barrier and apply every contribution —
+        # charging the K-th arrival there would understate the wait.
+        # Quorum pacing is exact only with cross-version busy state, which
+        # is what mode='async' reads off the compiled timeline instead.
+        return events.quorum_round_time(delays, mask, sched.t_server,
+                                        sfl.tau, quorum=0,
+                                        t_comm=sched.t_comm,
+                                        t_comm_scale=sched.t_comm_scale)
+
+    def metrics_spec(self, cfg, sfl):
+        return {"loss": (sfl.n_clients,)}
 
 
 @register
@@ -284,13 +373,20 @@ class FedLora(FedAvg):
 
 class SchedWindow(NamedTuple):
     """What a Controller observes at a chunk boundary: the system-model
-    rows of the rounds executed since its previous update."""
+    rows of the rounds executed since its previous update. Async runs
+    additionally carry ``quorum_wait`` — the per-version quorum waits from
+    the compiled timeline (arrival of the K-th contribution, BEFORE the
+    τ·t_server server floor — deliberately not the commit-to-commit
+    duration, which includes that floor and would self-reinforce a τ
+    planner): under event-driven commits THAT is the gap adaptive τ
+    should fill with server steps, not the max active delay."""
     start: int
     stop: int
     delays: np.ndarray   # (C, M) simulated client compute times
     masks: np.ndarray    # (C, M) participation·deadline rows consumed
     t_server: float
     t_comm: float
+    quorum_wait: Optional[np.ndarray] = None   # (C,) async quorum waits
 
 
 @runtime_checkable
@@ -350,9 +446,14 @@ class AdaptiveTau:
     def update(self, round_idx, window, metrics):
         if window is None or window.delays.size == 0:
             return {}
-        act = np.where(window.masks > 0, window.delays, -np.inf)
-        per_round = act.max(axis=1)
-        per_round = np.where(np.isfinite(per_round), per_round, 0.0)
+        if window.quorum_wait is not None:
+            # async window: the observed gap is the quorum wait — how long
+            # the server sat idle before the K-th arrival let it commit
+            per_round = np.asarray(window.quorum_wait, np.float64)
+        else:
+            act = np.where(window.masks > 0, window.delays, -np.inf)
+            per_round = act.max(axis=1)
+            per_round = np.where(np.isfinite(per_round), per_round, 0.0)
         obs = float(per_round.mean())
         self.t_hat = (obs if self.t_hat is None
                       else self.ema * obs + (1.0 - self.ema) * self.t_hat)
@@ -411,6 +512,22 @@ def make_chunk_fn(algo: Algorithm, cfg: ModelConfig, sfl: SFLConfig):
         (params, state), mets = jax.lax.scan(body, (params, state),
                                              (batches, masks, keys))
         return params, state, mets
+    return run_chunk
+
+
+def make_async_chunk_fn(algo: Algorithm, cfg: ModelConfig, sfl: SFLConfig):
+    """The fused multi-version async step: scan algo.async_round_fn over a
+    chunk of precomputed (batches, start_masks, apply_ws, keys) rows from
+    the compiled event timeline, carrying (params, record store)."""
+    def run_chunk(params, store, batches, start_masks, apply_ws, keys):
+        def body(carry, xs):
+            p, s = carry
+            b, sm, aw, k = xs
+            p, s, met = algo.async_round_fn(cfg, sfl, p, s, b, sm, aw, k)
+            return (p, s), met
+        (params, store), mets = jax.lax.scan(
+            body, (params, store), (batches, start_masks, apply_ws, keys))
+        return params, store, mets
     return run_chunk
 
 
@@ -526,6 +643,7 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                checkpointer=None, ckpt_every: int = 0,
                chunk_callback: Optional[Callable] = None,
                controller: Optional[Controller] = None,
+               tau_history: Optional[List[int]] = None,
                **algo_opts) -> EngineResult:
     """Run rounds [start_round, rounds) of ``algorithm``.
 
@@ -542,7 +660,14 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
     ckpt_every. mode='python': the legacy per-round loop — one jit call +
     host sync per round (equivalence/bench baseline); it shares the same
     chunk segmentation so controller decisions land on identical
-    boundaries in both modes.
+    boundaries in both modes. mode='async': event-driven semi-async
+    (core/events.py) — the schedule is compiled into an arrival-ordered
+    timeline, each "round" is one quorum-committed server version
+    (sfl.quorum / sfl.staleness_discount are the policy knobs), the
+    in-flight record store rides as engine state, and round_times are the
+    timeline's commit-to-commit durations; needs an async-capable
+    algorithm (async_mu_splitfed). With quorum 0 (= wait for all) and
+    discount 1.0 it reproduces mode='scan' exactly.
 
     ``controller`` (e.g. AdaptiveTau) runs at every chunk boundary and may
     override SFLConfig fields for the remaining rounds — 'tau' re-plans the
@@ -553,12 +678,20 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
 
     Checkpoints save at step = round index of the last completed round in
     the chunk (stateful algorithms bundle their engine state — see
-    restore_run); resume via restore_run and start_round=step+1.
+    restore_run); resume via restore_run and start_round=step+1. Async
+    controller runs additionally record the per-version τ trace in the
+    checkpoint metadata ('tau_per_version'): pass it back as
+    ``tau_history`` on resume so the timeline prefix recompiles with the
+    τ that actually executed.
     """
     algo = get_algorithm(algorithm, **algo_opts)
-    if mode not in ("scan", "python"):
-        raise ValueError(f"run_rounds: mode must be 'scan'|'python', "
+    if mode not in ("scan", "python", "async"):
+        raise ValueError(f"run_rounds: mode must be 'scan'|'python'|'async', "
                          f"got {mode!r}")
+    if mode == "async" and not hasattr(algo, "async_round_fn"):
+        raise ValueError(
+            f"mode='async' needs an async-capable algorithm (e.g. "
+            f"'async_mu_splitfed'); {algo.name!r} has no async_round_fn")
     n_run = rounds - start_round
     if n_run <= 0:
         empty = np.zeros((0,), np.float64)
@@ -574,11 +707,36 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
     mask_of = getattr(algo, "round_mask",
                       lambda sched, r: sched.masks[r % sched.n_rounds])
     sched_eff = schedule                 # re-derived on controller deadline
-    masks = np.stack([mask_of(sched_eff, r) for r in rows])
     time_masks = np.stack([sched_eff.masks[r % R] for r in rows])
-    round_times = np.array([algo.time_model(sched_eff.delays[r % R],
-                                            time_masks[i], sfl, sched_eff)
-                            for i, r in enumerate(rows)])
+    timeline: Optional[events.Timeline] = None
+    if mode == "async":
+        # compile the semi-async event timeline for the WHOLE run (from
+        # version 0, so a resumed run sees the identical prefix and slices
+        # its rows); the engine scans its per-version form as data.
+        # ``masks`` become the normalized staleness-discounted apply
+        # weights — round_loss / ChunkInfo weighting carries over as-is.
+        # ``tau_history`` replays a resumed controller run's per-version τ
+        # onto the prefix (checkpoint metadata 'tau_per_version'): the DES
+        # is only prefix-stable if the prefix is compiled with the τ that
+        # actually executed, otherwise the restored record store would
+        # meet inconsistent apply weights.
+        taus_v = np.full(rounds, sfl.tau, np.int64)
+        if tau_history is not None:
+            h = np.asarray(tau_history, np.int64)[:rounds]
+            taus_v[:len(h)] = h
+        amask_rows = np.stack([sched_eff.masks[v % R] for v in range(rounds)])
+        timeline = events.compile_timeline(
+            sched_eff, rounds, quorum=sfl.quorum,
+            discount=sfl.staleness_discount, tau=taus_v,
+            mask_rows=amask_rows)
+        masks = timeline.apply_w[start_round:rounds].copy()
+        start_masks = timeline.start_mask[start_round:rounds].copy()
+        round_times = timeline.durations[start_round:rounds].copy()
+    else:
+        masks = np.stack([mask_of(sched_eff, r) for r in rows])
+        round_times = np.array([algo.time_model(sched_eff.delays[r % R],
+                                                time_masks[i], sfl, sched_eff)
+                                for i, r in enumerate(rows)])
     tau_used = np.full(n_run, sfl.tau, np.int64)
     keys = fold_in_keys(key, start_round, n_run)
 
@@ -607,6 +765,10 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                 md["controller_overrides"] = dict(applied)
             if hasattr(controller, "state_dict"):
                 md["controller_state"] = controller.state_dict()
+            if timeline is not None:
+                # per-version τ trace: resume must recompile the timeline
+                # prefix with the τ that actually executed (tau_history)
+                md["tau_per_version"] = [int(t) for t in taus_v]
         return md
 
     def seg_info(r0, r1):
@@ -632,8 +794,10 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
 
     def controller_step(seg_idx):
         """Apply the controller's SFLConfig overrides for rounds >= this
-        segment; re-derive masks / wall-clock rows they affect."""
-        nonlocal sfl, sched_eff
+        segment; re-derive masks / wall-clock rows they affect. In async
+        mode the future of the event timeline is recompiled — the DES is
+        prefix-stable, so the already-executed versions are untouched."""
+        nonlocal sfl, sched_eff, timeline, state
         r0 = segments[seg_idx][0]
         window = None
         if seg_idx > 0:
@@ -642,7 +806,9 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
             window = SchedWindow(
                 p0, p1,
                 np.stack([sched_eff.delays[rr % R] for rr in range(p0, p1)]),
-                time_masks[i0:i1], sched_eff.t_server, sched_eff.t_comm)
+                time_masks[i0:i1], sched_eff.t_server, sched_eff.t_comm,
+                (timeline.quorum_wait[p0:p1].copy()
+                 if timeline is not None else None))
         upd = controller.update(r0, window, last_info) or {}
         changed = {k: v for k, v in upd.items() if getattr(sfl, k) != v}
         if not changed:
@@ -657,11 +823,36 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
             sched_eff = dataclasses.replace(
                 sched_eff, deadline=nd, masks=sched_eff.participation * nd)
             for j, rr in enumerate(rows[i:], start=i):
-                masks[j] = mask_of(sched_eff, rr)
                 time_masks[j] = sched_eff.masks[rr % R]
-        for j, rr in enumerate(rows[i:], start=i):
-            round_times[j] = algo.time_model(sched_eff.delays[rr % R],
-                                             time_masks[j], sfl, sched_eff)
+            if timeline is None:
+                for j, rr in enumerate(rows[i:], start=i):
+                    masks[j] = mask_of(sched_eff, rr)
+        if timeline is not None:
+            if {"quorum", "staleness_discount"} & set(changed):
+                raise ValueError(
+                    "controllers cannot override quorum/staleness_discount "
+                    "mid-run: the timeline is only prefix-stable under "
+                    "piecewise tau/deadline changes")
+            if {"tau", "deadline"} & set(changed):
+                taus_v[r0:] = sfl.tau
+                if "deadline" in changed:
+                    amask_rows[r0:] = np.stack(
+                        [sched_eff.masks[v % R] for v in range(r0, rounds)])
+                timeline = events.compile_timeline(
+                    sched_eff, rounds, quorum=sfl.quorum,
+                    discount=sfl.staleness_discount, tau=taus_v,
+                    mask_rows=amask_rows)
+                masks[i:] = timeline.apply_w[r0:rounds]
+                start_masks[i:] = timeline.start_mask[r0:rounds]
+                round_times[i:] = timeline.durations[r0:rounds]
+            if "tau" in changed:
+                # the record store's τ axis is static per executable
+                state = events.resize_store(state, sfl.tau)
+        else:
+            for j, rr in enumerate(rows[i:], start=i):
+                round_times[j] = algo.time_model(sched_eff.delays[rr % R],
+                                                 time_masks[j], sfl,
+                                                 sched_eff)
         tau_used[i:] = sfl.tau
 
     if mode == "python":
@@ -687,17 +878,24 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                 # in scan mode (flush above is per round here)
                 last_info = seg_info(r0, r1)
     else:
+        # fused on-device modes: 'scan' over schedule rows, 'async' over
+        # the compiled timeline's (start_mask, apply_w) rows with the
+        # in-flight record store carried as engine state — one loop, the
+        # modes differ only in the chunk body and its extra scanned input
+        make_fn = make_async_chunk_fn if mode == "async" else make_chunk_fn
         params, state = _copy_tree(params), _copy_tree(state)
         for si, (r0, r1) in enumerate(segments):
             if controller is not None:
                 controller_step(si)
             chunk_jit = _cached_jit(
-                algo, "scan", cfg, sfl,
-                lambda sfl=sfl: jax.jit(make_chunk_fn(algo, cfg, sfl),
+                algo, mode, cfg, sfl,
+                lambda sfl=sfl: jax.jit(make_fn(algo, cfg, sfl),
                                         donate_argnums=(0, 1)))
             i, C = r0 - start_round, r1 - r0
+            extra = ((jnp.asarray(start_masks[i:i + C]),)
+                     if mode == "async" else ())
             params, state, mets = chunk_jit(
-                params, state, _stack_chunk(batch_fn, r0, C),
+                params, state, _stack_chunk(batch_fn, r0, C), *extra,
                 jnp.asarray(masks[i:i + C]), keys[i:i + C])
             flush(mets, r0, r1)
             if (checkpointer is not None and ckpt_every

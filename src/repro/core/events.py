@@ -1,0 +1,338 @@
+"""Event-driven semi-async execution: arrival-ordered server updates with
+quorum aggregation and staleness-weighted seed replay.
+
+The engine's sync modes run a hard round barrier: every server commit waits
+for the full per-round mask, so one slow cohort stalls the fleet — exactly
+the synchronization cost the paper identifies. This module is the execution
+substrate that drops the barrier while keeping every device-side shape
+fixed:
+
+  compile_timeline   a host-side discrete-event simulator over the existing
+                     straggler.Schedule. Clients fetch the newest params at
+                     each server-version broadcast and deliver their
+                     contribution delay + uplink later; the server COMMITS
+                     version v+1 as soon as a quorum of K contributions has
+                     arrived (FedBuff-style semi-async; K=0 means "all
+                     pending" — the synchronous barrier). Contributions
+                     that miss the commit are NOT dropped: they fold into a
+                     later commit with staleness s = commits missed, and a
+                     discount^s weight. The product is a globally
+                     arrival-ordered, fixed-shape event stream — stacked
+                     (E,) arrays of (arrival_time, client_id, cohort_id,
+                     round_of_origin, staleness) — plus its per-version
+                     compiled form ((V, M) start/apply matrices and (V,)
+                     commit times) that the engine scans as *data*.
+  async_round_fn     the jit'd per-version step. Because every MU-SplitFed
+                     contribution is replayable seed-records ((key, coeff)
+                     pairs — zo.py's wire format), the whole in-flight
+                     buffer is a fixed (M, τ, P) record store carried as
+                     engine state: committing a quorum is one
+                     zo.replay_weighted_records call with the timeline's
+                     staleness-discounted weights scaled per record — no
+                     new kernel, the fused one-sweep replay path (ladder
+                     v4) applies the buffer regardless of which versions
+                     its records came from.
+
+Semantics (the "semi" in semi-async): client work is version-aligned —
+a client only fetches params and starts a fresh contribution at a version
+broadcast (the commit it was applied in, or later), never mid-version; the
+server is fully event-driven and commits on quorum arrival. With quorum
+K=0/K>=M and discount 1.0 every version's buffer is exactly the sync
+round's active set with the sync weights, so mode='async' reproduces
+mode='scan' (tests/test_events.py gates <=1e-5).
+
+Wall-clock model: version duration = max(K-th pending arrival, τ·t_server)
+— the unbalanced server steps still overlap the wait (Eq. 12) — where an
+arrival is fetch_time + delay + t_comm·uplink_scale. Note this charges the
+uplink per arrival (the sync models charge the slowest active uplink once
+per round), which is the natural accounting once arrivals, not round
+maxima, pace the server.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, SFLConfig
+from repro.core import zo
+from repro.core.splitfed import _client_round
+from repro.models import merge_params, split_params
+
+Params = Any
+
+__all__ = ["Timeline", "compile_timeline", "quorum_round_time",
+           "init_store", "resize_store", "async_mu_splitfed_step"]
+
+
+# ---------------------------------------------------------------------------
+# the event compiler (host-side discrete-event simulation)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Timeline:
+    """A compiled semi-async execution trace.
+
+    Flat, globally arrival-ordered event view — one row per delivered
+    contribution, all (E,):
+
+      arrival_time     absolute simulated delivery time
+      client_id        which client delivered
+      cohort_id        its population cohort (0 for scalar fleets)
+      round_of_origin  the version whose params/batch/mask it consumed
+      staleness        commits between fetch and apply (>=1 means it missed
+                       its own version's quorum and folded forward)
+      commit_idx       the version commit that applied it (-1: still in
+                       flight when the horizon ended — never applied)
+
+    Per-version compiled form the engine scans as data:
+
+      start_mask   (V, M) 1.0 where a client fetches params and begins a
+                   fresh contribution at this version's broadcast
+      apply_w      (V, M) normalized staleness-discounted aggregation
+                   weights of the records this commit applies (rows sum to
+                   1, or 0 for an empty commit); 0 = not applied
+      staleness_m  (V, M) staleness of the applied record (-1 = not applied)
+      commit_times (V,)   absolute commit completion times
+      durations    (V,)   per-version wall-clock (commit_times diffs)
+      quorum_wait  (V,)   time from broadcast to the quorum arrival, BEFORE
+                   the τ·t_server server floor — what an adaptive-τ
+                   controller should fill with server steps (Eq. 12)
+      applied      (V,)   contributions folded into each commit
+    """
+    arrival_time: np.ndarray
+    client_id: np.ndarray
+    cohort_id: np.ndarray
+    round_of_origin: np.ndarray
+    staleness: np.ndarray
+    commit_idx: np.ndarray
+    start_mask: np.ndarray
+    apply_w: np.ndarray
+    staleness_m: np.ndarray
+    commit_times: np.ndarray
+    durations: np.ndarray
+    quorum_wait: np.ndarray
+    applied: np.ndarray
+    quorum: int
+    discount: float
+    tau_per_version: np.ndarray
+
+    @property
+    def n_versions(self) -> int:
+        return self.start_mask.shape[0]
+
+    @property
+    def n_clients(self) -> int:
+        return self.start_mask.shape[1]
+
+    @property
+    def n_events(self) -> int:
+        return self.arrival_time.shape[0]
+
+
+def compile_timeline(schedule, n_versions: int, *, quorum: int = 0,
+                     discount: float = 1.0, tau=1,
+                     mask_rows: Optional[np.ndarray] = None) -> Timeline:
+    """Compile ``n_versions`` semi-async server versions from a Schedule.
+
+    quorum    K: commit as soon as K of the pending contributions have
+              arrived (K<=0 or K>=pending: wait for all — the sync
+              barrier). A commit folds in *everything* delivered by the
+              commit moment, quorum members and opportunistic extras alike.
+    discount  staleness weight base: a contribution applied s commits after
+              its fetch weighs discount**s before per-commit normalization
+              (discount 1.0 = stale and fresh weigh equally).
+    tau       server steps per version — scalar, or a (n_versions,) array
+              for controller-driven piecewise-τ runs. The commit can never
+              land before fetch + τ·t_server (unbalanced-update overlap).
+    mask_rows optional (n_versions, M) availability override; defaults to
+              the schedule's masks rows (cyclic). Used by the engine when a
+              controller re-derives deadline drops mid-run.
+
+    Deterministic in its inputs (the schedule already froze every random
+    draw), and prefix-stable: two compilations agreeing on the first v
+    versions of (tau, mask_rows) agree on the first v rows of every output
+    — which is what lets a controller recompile the future without
+    rewriting the past.
+    """
+    R, M = schedule.delays.shape
+    V = int(n_versions)
+    taus = np.full(V, tau, np.int64) if np.ndim(tau) == 0 else \
+        np.asarray(tau, np.int64)
+    if taus.shape != (V,):
+        raise ValueError(f"tau_per_version shape {taus.shape} != ({V},)")
+    if mask_rows is None:
+        mask_rows = np.stack([schedule.masks[v % R] for v in range(V)])
+    mask_rows = np.asarray(mask_rows, np.float32)
+    if mask_rows.shape != (V, M):
+        raise ValueError(f"mask_rows shape {mask_rows.shape} != ({V}, {M})")
+    comm = np.full(M, schedule.t_comm, np.float64)
+    if schedule.t_comm_scale is not None:
+        comm = schedule.t_comm * np.asarray(schedule.t_comm_scale, np.float64)
+    cohorts = (schedule.population.cohort_ids()
+               if getattr(schedule, "population", None) is not None
+               else np.zeros(M, np.int64))
+
+    start_mask = np.zeros((V, M), np.float32)
+    apply_w = np.zeros((V, M), np.float32)
+    staleness_m = np.full((V, M), -1, np.int64)
+    commit_times = np.zeros(V, np.float64)
+    durations = np.zeros(V, np.float64)
+    quorum_wait = np.zeros(V, np.float64)
+    applied_n = np.zeros(V, np.int64)
+    events = []                       # (arrival, client, origin, stale, commit)
+
+    t = 0.0
+    pending: Dict[int, Tuple[float, int]] = {}   # client -> (arrival, origin)
+    for v in range(V):
+        # broadcast: every idle client on this version's mask fetches the
+        # just-committed params and starts a fresh contribution
+        for m in range(M):
+            if mask_rows[v, m] > 0 and m not in pending:
+                pending[m] = (t + schedule.delays[v % R, m] + comm[m], v)
+                start_mask[v, m] = 1.0
+        arrivals = sorted(a for a, _ in pending.values())
+        k = len(arrivals) if quorum <= 0 else min(quorum, len(arrivals))
+        q_arrival = arrivals[k - 1] if k else t
+        quorum_wait[v] = max(q_arrival - t, 0.0)
+        c_time = max(q_arrival, t + float(taus[v]) * schedule.t_server)
+        # fold in everything delivered by the commit moment
+        w = np.zeros(M, np.float64)
+        for m in sorted(pending):
+            arr, origin = pending[m]
+            if arr <= c_time:
+                s = v - origin
+                w[m] = discount ** s
+                staleness_m[v, m] = s
+                events.append((arr, m, origin, s, v))
+                del pending[m]
+        tot = w.sum()
+        if tot > 0:
+            w = w / tot
+        apply_w[v] = w.astype(np.float32)
+        applied_n[v] = int((w > 0).sum())
+        commit_times[v] = c_time
+        durations[v] = c_time - t
+        t = c_time
+    # contributions still in flight at the horizon: delivered to nobody
+    for m in sorted(pending):
+        arr, origin = pending[m]
+        events.append((arr, m, origin, -1, -1))
+
+    ev = np.array(events, np.float64).reshape(-1, 5)
+    order = np.lexsort((ev[:, 1], ev[:, 0]))       # arrival, then client id
+    ev = ev[order]
+    client_id = ev[:, 1].astype(np.int64)
+    return Timeline(
+        arrival_time=ev[:, 0], client_id=client_id,
+        cohort_id=cohorts[client_id],
+        round_of_origin=ev[:, 2].astype(np.int64),
+        staleness=ev[:, 3].astype(np.int64),
+        commit_idx=ev[:, 4].astype(np.int64),
+        start_mask=start_mask, apply_w=apply_w, staleness_m=staleness_m,
+        commit_times=commit_times, durations=durations,
+        quorum_wait=quorum_wait, applied=applied_n,
+        quorum=int(quorum), discount=float(discount), tau_per_version=taus)
+
+
+def quorum_round_time(delays: np.ndarray, mask: np.ndarray, t_server: float,
+                      tau: int, quorum: int = 0, t_comm: float = 0.0,
+                      t_comm_scale: Optional[np.ndarray] = None) -> float:
+    """Steady-state single-version time under quorum commits: the K-th
+    smallest active arrival (delay + uplink), floored by the server's
+    τ·t_server. The compiled timeline is the exact account (it carries
+    busy clients across versions); this is the per-row approximation an
+    Algorithm.time_model can give without one."""
+    comm = (np.full_like(delays, t_comm) if t_comm_scale is None
+            else t_comm * np.asarray(t_comm_scale, np.float64))
+    arrivals = np.sort((delays + comm)[np.asarray(mask) > 0])
+    k = len(arrivals) if quorum <= 0 else min(quorum, len(arrivals))
+    wait = float(arrivals[k - 1]) if k else 0.0
+    return max(wait, tau * t_server)
+
+
+# ---------------------------------------------------------------------------
+# the jit'd per-version step: fixed-shape record store + quorum commit
+# ---------------------------------------------------------------------------
+
+def init_store(sfl: SFLConfig) -> Dict[str, jax.Array]:
+    """The in-flight contribution buffer: one slot per client (a client
+    computes at most one contribution at a time), each slot the replayable
+    seed-record wire format of a full MU-SplitFed contribution — (τ, P)
+    server records, the client (key, coeff) pair, and the fetch-time loss
+    metric. Zero coeffs make an empty/consumed slot replay-inert."""
+    M, T, P = sfl.n_clients, sfl.tau, sfl.n_perturbations
+    return {
+        "srv_keys": jnp.zeros((M, T, P, 2), jnp.uint32),
+        "srv_coeffs": jnp.zeros((M, T, P), jnp.float32),
+        "ukey": jnp.zeros((M, 2), jnp.uint32),
+        "ccoeff": jnp.zeros((M,), jnp.float32),
+        "loss0": jnp.zeros((M,), jnp.float32),
+    }
+
+
+def resize_store(store: Dict[str, jax.Array], tau: int) -> Dict[str, jax.Array]:
+    """Re-shape the record store's τ axis after a controller re-plans τ
+    (the store is jit state, so its shapes are static per executable).
+    Growth zero-pads (inert records); shrink truncates the tail server
+    records of still-in-flight stale contributions — an approximation on
+    work that would have been staleness-discounted anyway."""
+    old = store["srv_keys"].shape[1]
+    if tau == old:
+        return store
+    out = dict(store)
+    if tau > old:
+        pad = [(0, 0), (0, tau - old)] + [(0, 0)]
+        out["srv_keys"] = jnp.pad(store["srv_keys"], pad + [(0, 0)])
+        out["srv_coeffs"] = jnp.pad(store["srv_coeffs"], pad)
+    else:
+        out["srv_keys"] = store["srv_keys"][:, :tau]
+        out["srv_coeffs"] = store["srv_coeffs"][:, :tau]
+    return out
+
+
+def async_mu_splitfed_step(cfg: ModelConfig, sfl: SFLConfig, params: Params,
+                           store: Dict[str, jax.Array], batches,
+                           start_mask: jax.Array, apply_w: jax.Array,
+                           version_key, *, replay: str = "auto",
+                           eval_loss: bool = True):
+    """One server version of semi-async MU-SplitFed (pure/jit-able).
+
+    start_mask (M,) selects the clients that fetch the CURRENT params and
+    compute a fresh contribution this version (their records overwrite
+    their store slot — the timeline guarantees the old slot was already
+    committed). apply_w (M,) are the normalized staleness-discounted
+    weights of this version's quorum commit: the whole store is replayed
+    in one fused sweep with per-record coefficients c·η_g·w_m, so slots
+    with w=0 (in-flight or idle) contribute exactly zero. Client compute
+    happens at fetch time by construction, which is what makes stale
+    records genuinely stale: they were generated against the params of
+    their round_of_origin.
+    """
+    M = sfl.n_clients
+    xc, xs = split_params(cfg, params, sfl.cut_units)
+    mkeys = jax.vmap(lambda i: jax.random.fold_in(version_key, i))(
+        jnp.arange(M))
+    out = jax.vmap(lambda b, k: _client_round(cfg, sfl, xc, xs, b, k,
+                                              eval_loss, replay)
+                   )(batches, mkeys)
+    fresh = {"srv_keys": out["srv_keys"], "srv_coeffs": out["srv_coeffs"],
+             "ukey": out["ukey"], "ccoeff": out["ccoeff"],
+             "loss0": out["loss0"]}
+
+    def sel(new, old):
+        m = start_mask.reshape((M,) + (1,) * (new.ndim - 1))
+        return jnp.where(m > 0, new, old)
+
+    store = jax.tree.map(sel, fresh, store)
+    w = (sfl.lr_global * apply_w).astype(jnp.float32)
+    xs_new = zo.replay_weighted_records(xs, store["srv_keys"],
+                                        store["srv_coeffs"], w,
+                                        sfl.perturbation_dist, impl=replay)
+    xc_new = zo.replay_weighted_records(xc, store["ukey"], store["ccoeff"],
+                                        w, sfl.perturbation_dist, impl=replay)
+    metrics = {"loss": store["loss0"]}
+    return merge_params(cfg, xc_new, xs_new), store, metrics

@@ -72,6 +72,12 @@ class Cohort:
                             temporally correlated dropouts). A
                             ``participation`` fraction < 1 is drawn on top
                             of the chain.
+    availability='markov-shared' : ONE up/down chain for the whole cohort —
+                            every client drops and recovers together
+                            (tier-wide outages: a rack, a carrier, a
+                            region). One uniform draw per round per cohort;
+                            ``participation`` < 1 still draws per client on
+                            top while the tier is up.
     ``t_comm_scale`` scales the schedule's per-round t_comm for this tier
     (slow uplinks); the round is bounded by the slowest *active* link.
     """
@@ -87,9 +93,10 @@ class Cohort:
     def __post_init__(self):
         if self.n < 1:
             raise ValueError(f"cohort {self.name!r}: n must be >= 1")
-        if self.availability not in ("iid", "markov"):
+        if self.availability not in ("iid", "markov", "markov-shared"):
             raise ValueError(f"cohort {self.name!r}: availability must be "
-                             f"'iid'|'markov', got {self.availability!r}")
+                             f"'iid'|'markov'|'markov-shared', "
+                             f"got {self.availability!r}")
         if not (0.0 < self.participation <= 1.0):
             raise ValueError(f"cohort {self.name!r}: participation must be "
                              f"in (0, 1], got {self.participation}")
@@ -148,7 +155,7 @@ class ClientPopulation:
             f"scale={c.delay.scale:g}, part={c.participation:g}, "
             f"{c.availability}"
             + (f"(drop={c.p_dropout:g}/rec={c.p_recover:g})"
-               if c.availability == "markov" else "")
+               if c.availability.startswith("markov") else "")
             + (f", comm×{c.t_comm_scale:g}" if c.t_comm_scale != 1.0 else "")
             + "]" for c in self.cohorts)
 
@@ -215,6 +222,16 @@ class PopulationSampler:
                 m = self._up[i].astype(np.float32)
                 if c.participation < 1.0:
                     m = m * participation_mask(rng, c.n, c.participation)
+            elif c.availability == "markov-shared":
+                # one transition draw for the whole tier: correlated,
+                # rack/carrier-level outages — every client flips together
+                u = rng.random()
+                up = bool(self._up[i][0])
+                up = (u >= c.p_dropout) if up else (u < c.p_recover)
+                self._up[i][:] = up
+                m = np.full(c.n, float(up), np.float32)
+                if up and c.participation < 1.0:
+                    m = m * participation_mask(rng, c.n, c.participation)
             else:
                 m = participation_mask(rng, c.n, c.participation)
             row[sl] = m
@@ -234,13 +251,16 @@ def parse_population(spec: str, *,
     Each comma-separated item is one cohort of ``n`` clients running at
     relative ``speed`` (delay base = 1/speed, so speed 0.2 is 5× slower
     than speed 1.0). Optional suffixes: ``@0.5`` participation fraction,
-    ``~0.05/0.2`` Markov availability (P(up→down)/P(down→up)), ``%4``
-    communication-time scale. ``straggler_scale`` is the shared exponential
-    jitter applied to every cohort (the CLI's --straggler-scale).
+    ``~0.05/0.2`` per-client Markov availability (P(up→down)/P(down→up)),
+    ``~~0.05/0.2`` a SHARED per-cohort chain (the whole tier drops and
+    recovers together — correlated outages), ``%4`` communication-time
+    scale. ``straggler_scale`` is the shared exponential jitter applied to
+    every cohort (the CLI's --straggler-scale).
 
     Examples:
         tiered:4x1.0,12x0.2            4 fast + 12 five-times-slower clients
         tiered:4x1.0,4x0.25~0.05/0.2   slow tier with bursty Markov dropouts
+        tiered:4x1.0,4x0.25~~0.05/0.2  slow tier with tier-WIDE outages
     """
     body = spec.split(":", 1)[1] if spec.startswith("tiered:") else spec
     cohorts = []
@@ -254,6 +274,9 @@ def parse_population(spec: str, *,
         if "~" in item:
             item, tail = item.rsplit("~", 1)
             availability = "markov"
+            if item.endswith("~"):          # `~~p/p`: shared cohort chain
+                item = item[:-1]
+                availability = "markov-shared"
             p_drop, p_rec = (float(x) for x in tail.split("/"))
         part = 1.0
         if "@" in item:

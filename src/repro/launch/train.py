@@ -49,9 +49,24 @@ def main(argv=None):
                     help="heterogeneous fleet spec, e.g. "
                          "'tiered:4x1.0,12x0.2' — per cohort "
                          "<n>x<speed>[@part][~p_drop/p_recover][%%comm_scale]"
-                         "; overrides --clients/--participation (the "
+                         " (~~p/p: one SHARED chain per cohort — tier-wide "
+                         "outages); overrides --clients/--participation (the "
                          "deprecated single-cohort shorthand); "
                          "--straggler-scale becomes the shared jitter")
+    ap.add_argument("--async", dest="run_async", action="store_true",
+                    help="event-driven semi-async execution (core/events.py)"
+                         ": commit a server version as soon as --quorum "
+                         "contributions arrive; late arrivals fold into a "
+                         "later commit, discounted by --staleness-discount "
+                         "per missed commit. Implies "
+                         "--algorithm async_mu_splitfed")
+    ap.add_argument("--quorum", type=int, default=0,
+                    help="semi-async commit quorum K (0 = wait for all "
+                         "pending contributions — the synchronous barrier)")
+    ap.add_argument("--staleness-discount", type=float, default=1.0,
+                    help="weight base for stale contributions: a record "
+                         "applied s commits after its fetch weighs "
+                         "discount**s before per-commit normalization")
     ap.add_argument("--adaptive-tau", action="store_true",
                     help="re-plan tau at chunk boundaries from the observed "
                          "straggler gap (engine.AdaptiveTau; --tau is the "
@@ -66,13 +81,17 @@ def main(argv=None):
     ap.add_argument("--t-comm", type=float, default=0.0,
                     help="simulated per-round communication time (s), "
                          "charged by every algorithm's wall-clock model")
-    ap.add_argument("--aggregation", default="dense",
-                    choices=["dense", "seed_replay"])
+    ap.add_argument("--aggregation", default=None,
+                    choices=["dense", "seed_replay"],
+                    help="server aggregation (default dense; --async "
+                         "requires seed_replay — the record store is the "
+                         "replay wire format)")
     ap.add_argument("--client-mode", default="parallel",
                     choices=["parallel", "sequential"])
-    ap.add_argument("--loop", default="scan", choices=["scan", "python"],
+    ap.add_argument("--loop", default=None, choices=["scan", "python"],
                     help="fused multi-round scan (default) or the legacy "
-                         "one-dispatch-per-round loop")
+                         "one-dispatch-per-round loop; incompatible with "
+                         "--async (which runs the event-driven mode)")
     ap.add_argument("--chunk-size", type=int, default=8,
                     help="rounds fused per scan dispatch")
     ap.add_argument("--ckpt-dir", default="")
@@ -81,6 +100,31 @@ def main(argv=None):
     ap.add_argument("--lr-server", type=float, default=1e-3)
     ap.add_argument("--lr-client", type=float, default=5e-4)
     args = ap.parse_args(argv)
+
+    if args.run_async:
+        if args.loop is not None:
+            raise SystemExit("--async and --loop are mutually exclusive: "
+                             "--async runs the event-driven mode")
+        if args.algorithm == "mu_splitfed":
+            args.algorithm = "async_mu_splitfed"
+        elif args.algorithm != "async_mu_splitfed":
+            raise SystemExit(f"--async supports async_mu_splitfed, "
+                             f"not {args.algorithm}")
+        if args.aggregation == "dense":
+            raise SystemExit("--async requires --aggregation seed_replay: "
+                             "the in-flight record store is the seed-replay "
+                             "wire format")
+        args.aggregation = "seed_replay"
+        args.loop = "async"
+    else:
+        if args.quorum or args.staleness_discount != 1.0:
+            raise SystemExit("--quorum/--staleness-discount only take "
+                             "effect under --async (the synchronous modes "
+                             "never read them)")
+        if args.loop is None:
+            args.loop = "scan"
+        if args.aggregation is None:
+            args.aggregation = "dense"
 
     cfg = get_config(args.arch, smoke=args.smoke)
     # the client fleet: an explicit heterogeneous population, or the
@@ -96,7 +140,9 @@ def main(argv=None):
                     lr_server=args.lr_server, lr_client=args.lr_client,
                     participation=args.participation,
                     straggler_rate=args.straggler_scale,
-                    deadline=args.deadline, population=population)
+                    deadline=args.deadline, population=population,
+                    quorum=args.quorum,
+                    staleness_discount=args.staleness_discount)
     key = jax.random.PRNGKey(args.seed)
     params = untie_params(cfg, init_params(cfg, key))
 
@@ -111,9 +157,12 @@ def main(argv=None):
 
     algo = engine.get_algorithm(args.algorithm, **(
         {"client_mode": args.client_mode, "aggregation": args.aggregation}
-        if args.algorithm in ("mu_splitfed", "vanilla")
+        if args.algorithm in ("mu_splitfed", "vanilla", "async_mu_splitfed")
         else {"aggregation": args.aggregation}
         if args.algorithm == "gas" else {}))
+    if args.run_async:
+        print(f"semi-async: quorum {args.quorum or 'all'} of {n_clients}, "
+              f"staleness discount {args.staleness_discount}")
 
     controller = (engine.AdaptiveTau(tau_max=args.tau_max)
                   if args.adaptive_tau else None)
@@ -122,14 +171,21 @@ def main(argv=None):
     # e.g. the GAS activation buffer — rides along in the bundle, and
     # controller decisions/EMA state replay from the metadata)
     ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
-    start_round, state = 0, None
+    start_round, state, tau_history = 0, None, None
     if ck is not None:
-        from repro.ckpt import latest_step
+        from repro.ckpt import latest_step, read_meta
         if latest_step(args.ckpt_dir) is not None:
+            # replay controller overrides BEFORE restoring: stateful
+            # templates (e.g. the async record store's τ axis) are built
+            # from the adapted config
+            sfl = engine.apply_resume_overrides(
+                sfl, read_meta(args.ckpt_dir), controller)
             params, state, meta = engine.restore_run(
                 ck, algo, cfg, sfl, params, loader.round_batch)
-            sfl = engine.apply_resume_overrides(sfl, meta, controller)
             start_round = meta["step"] + 1
+            # async controller runs: recompile the timeline prefix with
+            # the per-version τ that actually executed
+            tau_history = meta["metadata"].get("tau_per_version")
             print(f"[resume] from round {start_round} (tau={sfl.tau})")
 
     # the whole system model — per-cohort delays, availability chains,
@@ -147,7 +203,7 @@ def main(argv=None):
         for i, r in enumerate(range(info.start, info.stop)):
             sim_t = wall.tick(info.round_times[i])
             print(f"round {r:4d}  loss {info.round_loss[i]:.4f}  active "
-                  f"{int(info.masks[i].sum())}/{n_clients}  "
+                  f"{int((info.masks[i] > 0).sum())}/{n_clients}  "
                   f"wall {time.time()-t0:.1f}s  sim_t {sim_t:.1f}")
 
     result = engine.run_rounds(
@@ -155,7 +211,7 @@ def main(argv=None):
         rounds=args.rounds, start_round=start_round, state=state,
         chunk_size=args.chunk_size, mode=args.loop, checkpointer=ck,
         ckpt_every=args.ckpt_every, chunk_callback=on_chunk,
-        controller=controller)
+        controller=controller, tau_history=tau_history)
     if controller is not None and controller.trace:
         taus = [t for _, t in controller.trace]
         print(f"adaptive tau: start {args.tau} -> final {taus[-1]} "

@@ -71,6 +71,46 @@ def test_unknown_algorithm_rejected():
         engine.get_algorithm("nope")
 
 
+def test_get_algorithm_memoizes_and_reuses_jit_cache(setup):
+    """get_algorithm returns the SAME adapter per (name, opts), so the
+    per-instance executable cache survives across run_rounds calls: a
+    repeated identical run must not re-trace the round body (the tracer
+    runs the Python body, so a counter in round_fn counts traces)."""
+    cfg, params, sfl, sched, batch_fn, key = setup
+    traces = []
+
+    @engine.register
+    class _Counting(engine.MuSplitFed):
+        name = "_trace_counter"
+
+        def round_fn(self, cfg, sfl, p, s, b, m, k):
+            traces.append(1)
+            return super().round_fn(cfg, sfl, p, s, b, m, k)
+
+    try:
+        assert engine.get_algorithm("_trace_counter") is \
+            engine.get_algorithm("_trace_counter")
+        assert engine.get_algorithm("_trace_counter", eval_loss=True) is \
+            engine.get_algorithm("_trace_counter", eval_loss=True)
+        kw = dict(rounds=4, mode="scan", chunk_size=2)
+        a = engine.run_rounds("_trace_counter", cfg, sfl, params, batch_fn,
+                              sched, key, **kw)
+        n_first = len(traces)
+        assert n_first > 0
+        b = engine.run_rounds("_trace_counter", cfg, sfl, params, batch_fn,
+                              sched, key, **kw)
+        assert len(traces) == n_first          # zero re-traces on rerun
+        assert np.array_equal(a.round_loss, b.round_loss)
+        # distinct opts resolve to a distinct (fresh) instance
+        assert engine.get_algorithm("_trace_counter", eval_loss=False) is not \
+            engine.get_algorithm("_trace_counter")
+    finally:
+        del engine.ALGORITHMS["_trace_counter"]
+        for k2 in [k2 for k2 in engine._INSTANCES
+                   if k2[0] == "_trace_counter"]:
+            del engine._INSTANCES[k2]
+
+
 def test_make_schedule_deterministic():
     a = strag.make_schedule(7, 12, 5, straggler_scale=1.5, participation=0.6,
                             deadline=3.0)

@@ -1,0 +1,317 @@
+"""Event-driven semi-async subsystem (core/events.py + engine mode='async'):
+timeline compilation semantics (quorum commits, staleness fold-in,
+determinism), the sync-equivalence gate (quorum=all + discount 1.0
+reproduces mode='scan'), bit-identical checkpoint resume with the record
+store, and the adaptive-τ controller over async windows."""
+import dataclasses
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import maxdiff, tiny_lm_cfg
+from repro.ckpt import Checkpointer
+from repro.configs import SFLConfig
+from repro.core import engine, events
+from repro.core import straggler as strag
+from repro.core.population import ClientPopulation, Cohort, DelayModel
+from repro.models import init_params, untie_params
+
+M = 4
+ROUNDS = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_lm_cfg(dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = untie_params(cfg, init_params(cfg, key))
+    sfl = SFLConfig(n_clients=M, tau=2, cut_units=1, lr_server=5e-3,
+                    lr_client=1e-3, lr_global=1.0)
+    # the acceptance regime: stragglers AND partial participation
+    sched = strag.make_schedule(0, ROUNDS, M, straggler_scale=2.0,
+                                participation=0.5, t_server=0.1, t_comm=0.2)
+
+    def batch_fn(r):
+        k = jax.random.fold_in(jax.random.PRNGKey(99), r)
+        t = jax.random.randint(k, (M, 2, 16), 0, cfg.vocab_size)
+        return {"tokens": t, "labels": t}
+
+    return cfg, params, sfl, sched, batch_fn, key
+
+
+def tiered_pop(fast=3, slow=1, base_slow=4.0):
+    return ClientPopulation(cohorts=(
+        Cohort(name="fast", n=fast, delay=DelayModel(base=0.3, scale=0.0)),
+        Cohort(name="slow", n=slow,
+               delay=DelayModel(base=base_slow, scale=0.0)),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# acceptance gate: async == sync at full quorum, no discount
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("aggregation", ["dense", "seed_replay"])
+def test_async_matches_scan_at_full_quorum(setup, aggregation):
+    """quorum=0 (wait for all) + staleness_discount=1.0: mode='async' must
+    reproduce mode='scan' — loss trajectory <=1e-5 and matching final
+    params — for mu_splitfed under stragglers + partial participation.
+    (Against seed_replay aggregation the async step is the identical
+    computation, so the match is exact; dense differs only by the
+    aggregation algebra, <=1e-5.)"""
+    cfg, params, sfl, sched, batch_fn, key = setup
+    sc = engine.run_rounds("mu_splitfed", cfg, sfl, params, batch_fn, sched,
+                           key, rounds=ROUNDS, mode="scan", chunk_size=3,
+                           aggregation=aggregation)
+    asy = engine.run_rounds("async_mu_splitfed", cfg, sfl, params, batch_fn,
+                            sched, key, rounds=ROUNDS, mode="async",
+                            chunk_size=3)
+    assert asy.round_loss.shape == (ROUNDS,)
+    assert np.max(np.abs(sc.round_loss - asy.round_loss)) <= 1e-5
+    assert maxdiff(sc.params, asy.params) <= 1e-5
+    if aggregation == "seed_replay":        # literally the same records
+        assert np.array_equal(sc.round_loss, asy.round_loss)
+        assert maxdiff(sc.params, asy.params) == 0.0
+
+
+def test_async_requires_capable_algorithm(setup):
+    cfg, params, sfl, sched, batch_fn, key = setup
+    with pytest.raises(ValueError, match="async_round_fn"):
+        engine.run_rounds("mu_splitfed", cfg, sfl, params, batch_fn, sched,
+                          key, rounds=2, mode="async")
+    # the record store IS the seed-replay wire format — anything else is
+    # rejected, not silently ignored
+    with pytest.raises(ValueError, match="not replayable"):
+        engine.get_algorithm("async_mu_splitfed", aggregation="dense")
+    with pytest.raises(ValueError, match="parallel"):
+        engine.get_algorithm("async_mu_splitfed", client_mode="sequential")
+
+
+# ---------------------------------------------------------------------------
+# timeline compilation semantics
+# ---------------------------------------------------------------------------
+
+def test_timeline_full_quorum_is_the_sync_barrier():
+    sched = strag.make_schedule(0, 6, 4, straggler_scale=1.5,
+                                participation=0.5, t_server=0.1)
+    tl = events.compile_timeline(sched, 6, quorum=0, discount=1.0, tau=2)
+    assert np.array_equal(tl.start_mask, sched.masks)
+    act = sched.masks.sum(1)
+    want = np.where(sched.masks > 0, 1.0 / act[:, None], 0.0)
+    assert np.allclose(tl.apply_w, want)
+    assert (tl.staleness == 0).all()
+    assert np.array_equal(tl.commit_idx, tl.round_of_origin)
+
+
+def test_timeline_quorum_commits_at_kth_arrival_and_folds_stragglers():
+    """K=3 of {3 fast, 1 slow}: commits pace at the fast tier; the slow
+    client's contribution is not dropped — it folds into a later commit
+    with staleness = commits missed and a discount**s weight, and the
+    client is busy (no fresh start) until it delivers."""
+    pop = tiered_pop(base_slow=1.0)
+    sched = strag.make_schedule(0, 12, population=pop, t_server=0.1)
+    tl = events.compile_timeline(sched, 12, quorum=3, discount=0.5, tau=2)
+    # fast tier paces every commit: duration = max(0.3, tau*t_server)
+    assert np.allclose(tl.durations, 0.3)
+    assert np.allclose(tl.quorum_wait, 0.3)
+    # slow client (id 3) delivers at 1.0 = 3 commits late, then restarts
+    slow = tl.client_id == 3
+    assert (tl.staleness[slow & (tl.commit_idx >= 0)] == 3).all()
+    # busy until delivery: no fresh start while its work is in flight
+    assert tl.start_mask[0, 3] == 1.0
+    assert (tl.start_mask[1:3, 3] == 0.0).all()
+    # discounted weight: 0.5**3 against three fresh (0.5**0) contributions
+    v = int(tl.commit_idx[np.flatnonzero(slow)[0]])
+    w = tl.apply_w[v]
+    assert w[3] == pytest.approx(0.125 / (3 + 0.125))
+    assert np.isclose(w.sum(), 1.0)
+    # flat event view is globally arrival-ordered
+    assert (np.diff(tl.arrival_time) >= 0).all()
+    # cohort ids come from the population
+    assert set(tl.cohort_id[tl.client_id <= 2]) == {0}
+    assert set(tl.cohort_id[tl.client_id == 3]) == {1}
+
+
+def test_timeline_deterministic_per_seed():
+    pop = tiered_pop()
+    kw = dict(quorum=3, discount=0.7, tau=2)
+    a = events.compile_timeline(
+        strag.make_schedule(5, 10, population=pop, t_server=0.1), 10, **kw)
+    b = events.compile_timeline(
+        strag.make_schedule(5, 10, population=pop, t_server=0.1), 10, **kw)
+    for f in dataclasses.fields(a):
+        va = getattr(a, f.name)
+        if isinstance(va, np.ndarray):
+            assert np.array_equal(va, getattr(b, f.name)), f.name
+    c = events.compile_timeline(
+        strag.make_schedule(6, 10, 4, straggler_scale=1.0, t_server=0.1),
+        10, **kw)
+    assert not np.array_equal(a.apply_w, c.apply_w)
+
+
+def test_timeline_prefix_stable_under_tau_change():
+    """Recompiling with a piecewise-τ array that agrees on the first v
+    versions must reproduce the first v rows exactly — what lets a
+    controller re-plan τ without rewriting the executed past."""
+    sched = strag.make_schedule(1, 8, 4, straggler_scale=1.0, t_server=0.3)
+    a = events.compile_timeline(sched, 8, quorum=2, discount=0.5, tau=2)
+    taus = np.full(8, 2, np.int64)
+    taus[4:] = 6
+    b = events.compile_timeline(sched, 8, quorum=2, discount=0.5, tau=taus)
+    assert np.array_equal(a.start_mask[:4], b.start_mask[:4])
+    assert np.array_equal(a.apply_w[:4], b.apply_w[:4])
+    assert np.array_equal(a.commit_times[:4], b.commit_times[:4])
+    # the re-planned tail actually changed the pacing
+    assert (b.durations[4:] >= 6 * 0.3 - 1e-12).all()
+
+
+def test_quorum_round_time_single_row():
+    delays = np.array([0.2, 0.5, 1.0, 9.0])
+    mask = np.array([1.0, 1.0, 1.0, 1.0])
+    assert events.quorum_round_time(delays, mask, 0.1, 2, quorum=3) \
+        == pytest.approx(1.0)
+    assert events.quorum_round_time(delays, mask, 0.1, 2, quorum=0) \
+        == pytest.approx(9.0)
+    # the tau*t_server floor (unbalanced-update overlap)
+    assert events.quorum_round_time(delays, mask, 0.4, 8, quorum=3) \
+        == pytest.approx(3.2)
+    # uplink scales enter the arrival, per client
+    assert events.quorum_round_time(
+        delays, mask, 0.1, 2, quorum=4, t_comm=0.1,
+        t_comm_scale=np.array([1.0, 1.0, 1.0, 10.0])) == pytest.approx(10.0)
+
+
+def test_resize_store_pads_and_truncates():
+    sfl = SFLConfig(n_clients=3, tau=4, n_perturbations=2)
+    store = events.init_store(sfl)
+    grown = events.resize_store(store, 6)
+    assert grown["srv_keys"].shape == (3, 6, 2, 2)
+    assert grown["srv_coeffs"].shape == (3, 6, 2)
+    shrunk = events.resize_store(grown, 2)
+    assert shrunk["srv_keys"].shape == (3, 2, 2, 2)
+    assert events.resize_store(store, 4) is store
+
+
+# ---------------------------------------------------------------------------
+# end-to-end semi-async: wall-clock + resume + adaptive tau
+# ---------------------------------------------------------------------------
+
+def test_async_quorum_beats_sync_wall_clock(setup):
+    """On a tiered fleet, K<M commits pace at the fast tier: the async run
+    must finish the same number of server versions in far less simulated
+    time than the synchronous barrier."""
+    cfg, params, _, _, batch_fn, key = setup
+    pop = tiered_pop(base_slow=4.0)
+    sched = strag.make_schedule(0, ROUNDS, population=pop, t_server=0.1)
+    base = SFLConfig(n_clients=M, tau=2, cut_units=1, lr_server=5e-3,
+                     lr_client=1e-3, lr_global=1.0, population=pop)
+    sync = engine.run_rounds("mu_splitfed", cfg, base, params, batch_fn,
+                             sched, key, rounds=ROUNDS, mode="scan")
+    sfl = dataclasses.replace(base, quorum=3, staleness_discount=0.5)
+    asy = engine.run_rounds("async_mu_splitfed", cfg, sfl, params, batch_fn,
+                            sched, key, rounds=ROUNDS, mode="async")
+    assert asy.sim_time < sync.sim_time / 3
+    assert np.isfinite(asy.round_loss).all()
+
+
+def test_async_resume_bit_identical(setup):
+    """Kill mid-run, restore the {'params', record-store} bundle, resume:
+    trajectory and final params/state must be BIT-identical — the compiled
+    timeline is deterministic and sliced from version 0, and the in-flight
+    buffer rides in the checkpoint."""
+    cfg, params, sfl0, _, batch_fn, key = setup
+    pop = tiered_pop(base_slow=1.0)
+    sfl = dataclasses.replace(sfl0, population=pop, straggler_rate=0.0,
+                              participation=1.0, quorum=3,
+                              staleness_discount=0.5)
+    sched = strag.make_schedule(0, ROUNDS, population=pop, t_server=0.1)
+    R, C = ROUNDS, 2
+    full = engine.run_rounds("async_mu_splitfed", cfg, sfl, params, batch_fn,
+                             sched, key, rounds=R, mode="async", chunk_size=C)
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        part1 = engine.run_rounds("async_mu_splitfed", cfg, sfl, params,
+                                  batch_fn, sched, key, rounds=4,
+                                  mode="async", chunk_size=C,
+                                  checkpointer=ck, ckpt_every=C)
+        ck.wait()
+        p2, s2, meta = engine.restore_run(ck, "async_mu_splitfed", cfg, sfl,
+                                          params, batch_fn)
+        assert meta["step"] == 3
+        assert meta["metadata"]["has_state"] is True
+        assert maxdiff(s2, part1.state) == 0.0     # store round-tripped
+        part2 = engine.run_rounds("async_mu_splitfed", cfg, sfl, p2,
+                                  batch_fn, sched, key, rounds=R,
+                                  start_round=meta["step"] + 1, state=s2,
+                                  mode="async", chunk_size=C)
+    resumed = np.concatenate([part1.round_loss, part2.round_loss])
+    assert np.array_equal(full.round_loss, resumed)
+    assert maxdiff(full.params, part2.params) == 0.0
+    assert maxdiff(full.state, part2.state) == 0.0
+
+
+def test_async_controller_resume_replays_tau_history(setup):
+    """A resumed adaptive-τ async run must recompile the timeline PREFIX
+    with the τ that actually executed (checkpoint metadata
+    'tau_per_version' -> run_rounds tau_history) — compiling the prefix
+    with the final τ would shift every commit time and hand the restored
+    record store inconsistent apply weights. On a stationary fleet the
+    resumed trajectory is then bit-identical to the uninterrupted run
+    (the skipped first re-plan is a no-op once τ has settled)."""
+    cfg, params, _, _, batch_fn, key = setup
+    pop = tiered_pop(base_slow=1.0)
+    sched = strag.make_schedule(0, ROUNDS, population=pop, t_server=0.1)
+    sfl = SFLConfig(n_clients=M, tau=1, cut_units=1, lr_server=5e-3,
+                    lr_client=1e-3, lr_global=1.0, population=pop,
+                    quorum=3, staleness_discount=0.5)
+    full = engine.run_rounds("async_mu_splitfed", cfg, sfl, params, batch_fn,
+                             sched, key, rounds=ROUNDS, mode="async",
+                             chunk_size=2,
+                             controller=engine.AdaptiveTau(tau_max=8))
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        ctl = engine.AdaptiveTau(tau_max=8)
+        engine.run_rounds("async_mu_splitfed", cfg, sfl, params, batch_fn,
+                          sched, key, rounds=6, mode="async", chunk_size=2,
+                          controller=ctl, checkpointer=ck, ckpt_every=2)
+        ck.wait()
+        from repro.ckpt import read_meta
+        ctl2 = engine.AdaptiveTau(tau_max=8)
+        sfl2 = engine.apply_resume_overrides(sfl, read_meta(d), ctl2)
+        assert sfl2.tau > 1                        # controller re-planned
+        p2, s2, meta = engine.restore_run(ck, "async_mu_splitfed", cfg,
+                                          sfl2, params, batch_fn)
+        hist = meta["metadata"]["tau_per_version"]
+        assert hist[:2] == [1, 1]                  # the τ=1 prefix survives
+        part2 = engine.run_rounds("async_mu_splitfed", cfg, sfl2, p2,
+                                  batch_fn, sched, key, rounds=ROUNDS,
+                                  start_round=meta["step"] + 1, state=s2,
+                                  mode="async", chunk_size=2,
+                                  controller=ctl2, tau_history=hist)
+    assert np.array_equal(full.round_loss[meta["step"] + 1:],
+                          part2.round_loss)
+    assert maxdiff(full.params, part2.params) == 0.0
+    assert np.array_equal(full.tau_per_round[meta["step"] + 1:],
+                          part2.tau_per_round)
+
+
+def test_adaptive_tau_consumes_async_window(setup):
+    """Over async windows AdaptiveTau observes the QUORUM wait (K-th
+    arrival), not the max active delay: with 3 fast clients at 0.3s and a
+    4s straggler, quorum=3 plans τ = 0.3/t_server, not 4/t_server."""
+    cfg, params, _, _, batch_fn, key = setup
+    pop = tiered_pop(base_slow=4.0)
+    sched = strag.make_schedule(0, ROUNDS, population=pop, t_server=0.1)
+    sfl = SFLConfig(n_clients=M, tau=1, cut_units=1, lr_server=5e-3,
+                    lr_client=1e-3, lr_global=1.0, population=pop, quorum=3)
+    ctl = engine.AdaptiveTau(tau_max=64)
+    res = engine.run_rounds("async_mu_splitfed", cfg, sfl, params, batch_fn,
+                            sched, key, rounds=ROUNDS, mode="async",
+                            chunk_size=2, controller=ctl)
+    want = strag.plan_tau(0.3, 0.1)                # = 3, not 40
+    assert [t for _, t in ctl.trace] == [want] * 3
+    assert res.tau_per_round.tolist() == [1, 1] + [want] * (ROUNDS - 2)
+    # re-planned τ re-paced the committed versions (timeline recompiled)
+    assert res.round_times[-1] == pytest.approx(max(0.3, want * 0.1))

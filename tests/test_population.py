@@ -117,6 +117,38 @@ def test_markov_never_drops_when_p_dropout_zero():
     assert np.array_equal(sched.participation, np.ones((10, 3), np.float32))
 
 
+def test_markov_shared_whole_tier_moves_together():
+    """availability='markov-shared': ONE chain per cohort — every client in
+    the tier is up or down together (correlated outages), deterministic
+    per seed, and the per-client 'markov' cohorts are unaffected."""
+    pop = ClientPopulation(cohorts=(
+        Cohort(name="solo", n=2, delay=DelayModel(base=1.0, scale=0.0),
+               availability="markov", p_dropout=0.3, p_recover=0.4),
+        Cohort(name="tier", n=3, delay=DelayModel(base=2.0, scale=0.0),
+               availability="markov-shared", p_dropout=0.3, p_recover=0.4),
+    ))
+    a = strag.make_schedule(11, 40, population=pop)
+    tier = a.participation[:, 2:]
+    assert all(len(set(row.tolist())) == 1 for row in tier)   # moves as one
+    assert 0.0 < tier.mean() < 1.0                 # chain visits both states
+    b = strag.make_schedule(11, 40, population=pop)
+    assert np.array_equal(a.participation, b.participation)
+    c = strag.make_schedule(12, 40, population=pop)
+    assert not np.array_equal(a.participation, c.participation)
+
+
+def test_markov_shared_alternates_deterministically():
+    """p_dropout = p_recover = 1 flips the whole cohort every round (the
+    chain starts up and transitions before round 0 is read) — the shared
+    analogue of the per-client alternation test above."""
+    pop = ClientPopulation(cohorts=(
+        Cohort(name="t", n=3, delay=DelayModel(base=1.0, scale=0.0),
+               availability="markov-shared", p_dropout=1.0, p_recover=1.0),))
+    sched = strag.make_schedule(0, 4, population=pop)
+    assert sched.participation.tolist() == [
+        [0, 0, 0], [1, 1, 1], [0, 0, 0], [1, 1, 1]]
+
+
 def test_parse_population_grammar():
     pop = parse_population("tiered:4x1.0,12x0.2@0.5~0.05/0.2%4",
                            straggler_scale=0.7)
@@ -128,6 +160,9 @@ def test_parse_population_grammar():
     assert (slow.availability, slow.p_dropout, slow.p_recover) == \
         ("markov", 0.05, 0.2)
     assert slow.t_comm_scale == 4.0
+    shared = parse_population("tiered:2x1.0,3x0.5~~0.1/0.3").cohorts[1]
+    assert (shared.availability, shared.p_dropout, shared.p_recover) == \
+        ("markov-shared", 0.1, 0.3)
     with pytest.raises(ValueError, match="bad cohort spec"):
         parse_population("tiered:fastx1.0")
     with pytest.raises(ValueError, match="speed"):
