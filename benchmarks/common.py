@@ -50,7 +50,8 @@ def run_mu_splitfed_result(cfg, params, ds, parts, key, *, M, tau, cut,
                            t_server=0.1, t_comm=0.0, seed=0,
                            chunk_size=8, algorithm="mu_splitfed",
                            mode="scan", aggregation=None, quorum=0,
-                           staleness_discount=1.0) -> engine.EngineResult:
+                           staleness_discount=1.0, timeline="dense",
+                           k_max=0, ring_capacity=0) -> engine.EngineResult:
     """Full EngineResult for one MU-SplitFed-family run through the engine.
 
     The fleet resolves through the one ClientPopulation.resolve path: an
@@ -69,7 +70,9 @@ def run_mu_splitfed_result(cfg, params, ds, parts, key, *, M, tau, cut,
                     lr_server=lr_server, lr_client=lr_client,
                     lr_global=lr_global, participation=participation,
                     straggler_rate=straggler_scale, population=population,
-                    quorum=quorum, staleness_discount=staleness_discount)
+                    quorum=quorum, staleness_discount=staleness_discount,
+                    timeline=timeline, k_max=k_max,
+                    ring_capacity=ring_capacity)
     sched = strag.make_schedule(seed, rounds,
                                 population=strag.ClientPopulation.resolve(sfl),
                                 t_server=t_server, t_comm=t_comm)

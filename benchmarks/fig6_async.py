@@ -26,16 +26,22 @@ in perf_iterations.json as rung v6.
     PYTHONPATH=src python -m benchmarks.fig6_async [--rounds 60]
     PYTHONPATH=src python -m benchmarks.fig6_async --smoke   # CI gate:
         mode='async' at full quorum == mode='scan', bit for bit
+    PYTHONPATH=src python -m benchmarks.fig6_async --clients 4096
+        # fleet-scale arm (K=64), sparse timeline only — the regime where
+        # the dense path's O(V·M) rows and M-wide client vmap are the wall
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import time
+import tracemalloc
 
+import jax
 import numpy as np
 
-from benchmarks.common import (make_setup, run_mu_splitfed_result,
+from benchmarks.common import (make_setup, run_mu_splitfed_result, tiny_cfg,
                                wall_to_target)
 from repro.core.population import ClientPopulation, Cohort, DelayModel
 
@@ -103,6 +109,94 @@ def run(rounds=60, seed=0):
             "population": POPULATION.describe(), "arms": arms}
 
 
+def clients_arm(M_big=4096, quorum=64, versions=6, seed=0,
+                timeline="sparse"):
+    """Fleet-scale arm: the semi-async engine at M=4096, K=64 — sparse
+    timeline only. This is the regime the sparse backend exists for: the
+    dense path would materialize (V, M) timeline rows host-side AND
+    dispatch an M-wide client vmap per version (device batches and client
+    outputs scale with the fleet, not with the K that commits), so it is
+    refused here with the estimate rather than run."""
+    from repro.configs import SFLConfig
+    from repro.core import engine, events
+    from repro.core import straggler as strag
+    from repro.models import init_params, untie_params
+
+    n_slow = M_big // 5
+    pop = ClientPopulation(cohorts=(
+        Cohort(name="fast", n=M_big - n_slow,
+               delay=DelayModel(base=0.3, scale=0.3)),
+        Cohort(name="slow", n=n_slow,
+               delay=DelayModel(base=4.0, scale=0.5)),
+    ))
+    sfl = SFLConfig(n_clients=M_big, tau=2, cut_units=CUT,
+                    lr_server=LR_SERVER, lr_client=LR_CLIENT, lr_global=1.0,
+                    population=pop, quorum=quorum,
+                    staleness_discount=DISCOUNT, timeline="sparse")
+    k_max, cap = events.resolve_store_geometry(sfl)
+    if timeline != "sparse":
+        raise SystemExit(
+            f"--clients {M_big} requires --timeline sparse: the dense path "
+            f"precompiles (V, M) rows ({M_big * 16 / 2**10:.0f} KB of host "
+            f"rows per version at M={M_big}, plus the O(E) event list) and "
+            f"dispatches an {M_big}-wide client vmap per version — device "
+            f"batches and outputs scale with the fleet. The sparse engine "
+            f"touches only k_max={k_max} starts and a {cap}-slot ring")
+
+    cfg = tiny_cfg()
+    key = jax.random.PRNGKey(seed)
+    params = untie_params(cfg, init_params(cfg, key))
+
+    def batch_fn(r):
+        # fleet-size synthetic tokens, (M, b, S) host-side; the sparse
+        # chunk gathers only the <= k_max started rows before dispatch
+        rr = np.random.default_rng((seed << 20) + r)
+        toks = rr.integers(0, cfg.vocab_size, (M_big, 2, 17), np.int32)
+        return {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+
+    sched = strag.make_schedule(seed, 8, population=pop,
+                                t_server=T_SERVER, t_comm=0.05)
+    t0 = time.perf_counter()
+    res = engine.run_rounds("async_mu_splitfed", cfg, sfl, params, batch_fn,
+                            sched, key, rounds=versions, chunk_size=3,
+                            mode="async", aggregation="seed_replay")
+    wall = time.perf_counter() - t0
+
+    # the host-side half of the wall, measured: dense (V, M) compile peak
+    # vs the stream at the same scale
+    def _peak(fn):
+        tracemalloc.start()
+        fn()
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        return peak
+    d_peak = _peak(lambda: events.compile_timeline(
+        sched, versions, quorum=quorum, discount=DISCOUNT, tau=2))
+    st = events.TimelineStream(sched, versions, quorum=quorum,
+                               discount=DISCOUNT, taus=2, k_max=k_max,
+                               capacity=cap)
+    s_peak = _peak(lambda: [st.take(3) for _ in range(versions // 3)])
+
+    out = {
+        "clients": M_big, "quorum": quorum, "k_max": k_max,
+        "ring_capacity": cap, "versions": versions,
+        "final_loss": float(np.mean(res.round_loss[-3:])),
+        "sim_time": float(res.sim_time), "wall_s": round(wall, 1),
+        "host_timeline_peak_mb": {
+            "dense": round(d_peak / 2**20, 3),
+            "sparse": round(s_peak / 2**20, 3)},
+        "device_rows_per_version": {"dense": M_big, "sparse": k_max},
+    }
+    print(f"fleet-scale semi-async: M={M_big}, K={quorum} "
+          f"(k_max={k_max}, ring={cap}), {versions} versions in "
+          f"{wall:.1f}s wall, final loss {out['final_loss']:.4f}")
+    print(f"host timeline peak: dense {d_peak / 2**20:.1f} MB vs sparse "
+          f"{s_peak / 2**20:.2f} MB ({d_peak / max(s_peak, 1):.0f}x); "
+          f"device client rows/version: dense {M_big} vs sparse {k_max} "
+          f"({M_big // k_max}x)")
+    return out
+
+
 def smoke(rounds=8, seed=0):
     """The CI gate: at full quorum (K=0 ≡ wait-for-all) and discount 1.0
     the event-driven path must reproduce the synchronous scan — identical
@@ -135,12 +229,26 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI mode: the async==sync full-quorum gate "
                          "only, no json write")
+    ap.add_argument("--clients", type=int, default=0,
+                    help="fleet-scale arm instead of the tau grid: run the "
+                         "semi-async engine at this fleet size with K=64 "
+                         "(sparse timeline only)")
+    ap.add_argument("--timeline", default="sparse",
+                    choices=["sparse", "dense"],
+                    help="timeline backend for the --clients arm (dense is "
+                         "refused with the O(V*M) estimate)")
+    ap.add_argument("--scale-versions", type=int, default=6,
+                    help="versions for the --clients arm")
     ap.add_argument("--out", default="bench_fig6.json")
     ap.add_argument("--perf-out", default="perf_iterations.json")
     args = ap.parse_args(argv)
     if args.smoke:
         smoke()
         return None
+    if args.clients:
+        return clients_arm(M_big=args.clients, quorum=64,
+                           versions=args.scale_versions, seed=args.seed,
+                           timeline=args.timeline)
 
     res = run(rounds=args.rounds, seed=args.seed)
     print(f"population: {res['population']}")

@@ -180,6 +180,14 @@ class SFLConfig:
     # after its fetch weighs staleness_discount**s (1.0 = no discount)
     quorum: int = 0
     staleness_discount: float = 1.0
+    # timeline backend for mode='async': 'dense' precompiles (V, M) rows
+    # (the small-M reference); 'sparse' streams (V, k_max) commit batches
+    # over an arrival-slot ring store of ring_capacity slots.  0 = auto for
+    # both knobs (events.resolve_store_geometry); with the autos and
+    # quorum=0 the sparse path is bit-equivalent to dense.
+    timeline: str = "dense"
+    k_max: int = 0
+    ring_capacity: int = 0
     # the first-class fleet spec (hashable, jit-static like the rest of
     # this config); None -> single cohort from the scalar shorthands
     population: Optional["ClientPopulation"] = None

@@ -254,6 +254,14 @@ class AsyncMuSplitFed(MuSplitFed):
             cfg, sfl, params, store, batch, start_mask, apply_w, key,
             replay=self.replay, eval_loss=self.eval_loss)
 
+    def async_sparse_round_fn(self, cfg, sfl, params, store, batch,
+                              start_client, start_slot, apply_slot,
+                              apply_w, key):
+        return events.async_mu_splitfed_sparse_step(
+            cfg, sfl, params, store, batch, start_client, start_slot,
+            apply_slot, apply_w, key, replay=self.replay,
+            eval_loss=self.eval_loss)
+
     def time_model(self, delays, mask, sfl, sched):
         # event arrival times, not round maxima: the version ends at the
         # last pending ARRIVAL (delay + that client's own uplink), floored
@@ -269,6 +277,8 @@ class AsyncMuSplitFed(MuSplitFed):
                                         t_comm_scale=sched.t_comm_scale)
 
     def metrics_spec(self, cfg, sfl):
+        if getattr(sfl, "timeline", "dense") == "sparse":
+            return {"loss": (events.resolve_store_geometry(sfl)[0],)}
         return {"loss": (sfl.n_clients,)}
 
 
@@ -531,18 +541,54 @@ def make_async_chunk_fn(algo: Algorithm, cfg: ModelConfig, sfl: SFLConfig):
     return run_chunk
 
 
+def make_sparse_chunk_fn(algo: Algorithm, cfg: ModelConfig, sfl: SFLConfig):
+    """The fused multi-version sparse-async step: scan
+    algo.async_sparse_round_fn over the streamed timeline's (C, K) commit-
+    batch rows — pre-gathered client batches, start scatter indices into
+    the ring store, and apply gather indices + weights — carrying
+    (params, ring store)."""
+    def run_chunk(params, store, batches, start_client, start_slot,
+                  apply_slot, apply_ws, keys):
+        def body(carry, xs):
+            p, s = carry
+            b, sc, ss, asl, aw, k = xs
+            p, s, met = algo.async_sparse_round_fn(cfg, sfl, p, s, b, sc,
+                                                   ss, asl, aw, k)
+            return (p, s), met
+        (params, store), mets = jax.lax.scan(
+            body, (params, store),
+            (batches, start_client, start_slot, apply_slot, apply_ws, keys))
+        return params, store, mets
+    return run_chunk
+
+
+def _stack_leaves(*xs):
+    # host (numpy) leaves stack on host then upload once; device leaves
+    # stack on-device — never bounce device->host->device
+    if all(isinstance(x, np.ndarray) for x in xs):
+        return jnp.asarray(np.stack(xs))
+    return jnp.stack([jnp.asarray(x) for x in xs])
+
+
 def _stack_chunk(batch_fn, r0: int, n: int):
-    """Stack n rounds of per-client batches -> leaves (n, M, ...). Host
-    (numpy) leaves stack on host then upload once; device leaves stack
-    on-device — batch_fn output must never bounce device->host->device."""
-    rounds = [batch_fn(r0 + i) for i in range(n)]
+    """Stack n rounds of per-client batches -> leaves (n, M, ...)."""
+    return jax.tree.map(_stack_leaves, *[batch_fn(r0 + i) for i in range(n)])
 
-    def stack(*xs):
-        if all(isinstance(x, np.ndarray) for x in xs):
-            return jnp.asarray(np.stack(xs))
-        return jnp.stack([jnp.asarray(x) for x in xs])
 
-    return jax.tree.map(stack, *rounds)
+def _stack_sparse_chunk(batch_fn, r0: int, start_clients: np.ndarray):
+    """Stack a sparse chunk's batch rows -> leaves (C, K, ...): per
+    version, gather ONLY the starting clients' rows from that round's
+    batch (pad rows re-read client 0 — their records land in the ring's
+    dropped pad slot, so they are never applied). The device never sees an
+    (M, ...) batch, which is what keeps upload volume O(K) per version."""
+    rounds = []
+    for j in range(start_clients.shape[0]):
+        idx = np.clip(start_clients[j], 0, None)
+        b = batch_fn(r0 + j)
+        rounds.append(jax.tree.map(
+            lambda x: x[idx] if isinstance(x, np.ndarray)
+            else jnp.take(jnp.asarray(x), jnp.asarray(idx), axis=0), b))
+    return jax.tree.map(_stack_leaves, *rounds)
 
 
 def _copy_tree(tree):
@@ -669,6 +715,14 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
     algorithm (async_mu_splitfed). With quorum 0 (= wait for all) and
     discount 1.0 it reproduces mode='scan' exactly.
 
+    sfl.timeline picks the async backend: 'dense' precompiles the whole
+    (V, M) timeline up front (small-M reference); 'sparse' streams
+    (chunk, k_max) commit batches from the heap DES while the device
+    scans the previous chunk, with the in-flight records in a bounded
+    arrival-slot ring (events.resolve_store_geometry) — same semantics,
+    O(k_max · chunk) host rows instead of O(V · M), and per-version
+    batch upload gathered down to the starting clients.
+
     ``controller`` (e.g. AdaptiveTau) runs at every chunk boundary and may
     override SFLConfig fields for the remaining rounds — 'tau' re-plans the
     unbalanced server updates (re-jit amortized by the per-algo executable
@@ -692,6 +746,17 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
         raise ValueError(
             f"mode='async' needs an async-capable algorithm (e.g. "
             f"'async_mu_splitfed'); {algo.name!r} has no async_round_fn")
+    if sfl.timeline not in ("dense", "sparse"):
+        raise ValueError(f"run_rounds: sfl.timeline must be 'dense'|"
+                         f"'sparse', got {sfl.timeline!r}")
+    sparse = sfl.timeline == "sparse"
+    if sparse and mode != "async":
+        raise ValueError(
+            "timeline='sparse' is the streaming semi-async path; run it "
+            "with mode='async' (the sync modes scan dense schedule rows)")
+    if sparse and not hasattr(algo, "async_sparse_round_fn"):
+        raise ValueError(f"timeline='sparse' needs an algorithm with "
+                         f"async_sparse_round_fn; {algo.name!r} has none")
     n_run = rounds - start_round
     if n_run <= 0:
         empty = np.zeros((0,), np.float64)
@@ -707,8 +772,14 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
     mask_of = getattr(algo, "round_mask",
                       lambda sched, r: sched.masks[r % sched.n_rounds])
     sched_eff = schedule                 # re-derived on controller deadline
-    time_masks = np.stack([sched_eff.masks[r % R] for r in rows])
+    # (n_run, M) mask rows feed sync round_times and controller windows;
+    # the sparse path never materializes them — windows rebuild rows on
+    # demand from the mask-epoch list below
+    time_masks = (None if sparse else
+                  np.stack([sched_eff.masks[r % R] for r in rows]))
     timeline: Optional[events.Timeline] = None
+    stream: Optional[events.TimelineStream] = None
+    qwaits: Optional[np.ndarray] = None
     if mode == "async":
         # compile the semi-async event timeline for the WHOLE run (from
         # version 0, so a resumed run sees the identical prefix and slices
@@ -724,14 +795,46 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
         if tau_history is not None:
             h = np.asarray(tau_history, np.int64)[:rounds]
             taus_v[:len(h)] = h
-        amask_rows = np.stack([sched_eff.masks[v % R] for v in range(rounds)])
-        timeline = events.compile_timeline(
-            sched_eff, rounds, quorum=sfl.quorum,
-            discount=sfl.staleness_discount, tau=taus_v,
-            mask_rows=amask_rows)
-        masks = timeline.apply_w[start_round:rounds].copy()
-        start_masks = timeline.start_mask[start_round:rounds].copy()
-        round_times = timeline.durations[start_round:rounds].copy()
+        if sparse:
+            # streaming timeline: no (V, M) rows, no (V, ·) precompute.
+            # The DES streams (C, k_max) commit batches chunk-by-chunk;
+            # skip(start_round) replays the prefix so the ring/slot state
+            # at resume is identical to the original run's. Deadline
+            # re-plans append (from_version, schedule) epochs instead of
+            # rewriting dense mask rows.
+            k_geo, cap_geo = events.resolve_store_geometry(sfl)
+            mask_epochs: List[Tuple[int, strag.Schedule]] = [(0, sched_eff)]
+
+            def _mask_row_at(v: int) -> np.ndarray:
+                sch = mask_epochs[0][1]
+                for v0, cand in mask_epochs:
+                    if v >= v0:
+                        sch = cand
+                return sch.masks[v % R]
+
+            def _new_stream(skip_to: int) -> events.TimelineStream:
+                st = events.TimelineStream(
+                    sched_eff, rounds, quorum=sfl.quorum,
+                    discount=sfl.staleness_discount, taus=taus_v,
+                    k_max=k_geo, capacity=cap_geo,
+                    mask_row_fn=_mask_row_at)
+                st.skip(skip_to)
+                return st
+
+            stream = _new_stream(start_round)
+            masks = np.zeros((n_run, k_geo), np.float32)
+            round_times = np.zeros(n_run, np.float64)
+            qwaits = np.zeros(n_run, np.float64)
+        else:
+            amask_rows = np.stack([sched_eff.masks[v % R]
+                                   for v in range(rounds)])
+            timeline = events.compile_timeline(
+                sched_eff, rounds, quorum=sfl.quorum,
+                discount=sfl.staleness_discount, tau=taus_v,
+                mask_rows=amask_rows)
+            masks = timeline.apply_w[start_round:rounds].copy()
+            start_masks = timeline.start_mask[start_round:rounds].copy()
+            round_times = timeline.durations[start_round:rounds].copy()
     else:
         masks = np.stack([mask_of(sched_eff, r) for r in rows])
         round_times = np.array([algo.time_model(sched_eff.delays[r % R],
@@ -765,7 +868,7 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                 md["controller_overrides"] = dict(applied)
             if hasattr(controller, "state_dict"):
                 md["controller_state"] = controller.state_dict()
-            if timeline is not None:
+            if mode == "async":
                 # per-version τ trace: resume must recompile the timeline
                 # prefix with the τ that actually executed (tau_history)
                 md["tau_per_version"] = [int(t) for t in taus_v]
@@ -797,18 +900,24 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
         segment; re-derive masks / wall-clock rows they affect. In async
         mode the future of the event timeline is recompiled — the DES is
         prefix-stable, so the already-executed versions are untouched."""
-        nonlocal sfl, sched_eff, timeline, state
+        nonlocal sfl, sched_eff, timeline, stream, state
         r0 = segments[seg_idx][0]
         window = None
         if seg_idx > 0:
             p0, p1 = segments[seg_idx - 1]
             i0, i1 = p0 - start_round, p1 - start_round
+            if sparse:
+                wmasks = np.stack([_mask_row_at(rr)
+                                   for rr in range(p0, p1)])
+                qw = qwaits[i0:i1].copy()
+            else:
+                wmasks = time_masks[i0:i1]
+                qw = (timeline.quorum_wait[p0:p1].copy()
+                      if timeline is not None else None)
             window = SchedWindow(
                 p0, p1,
                 np.stack([sched_eff.delays[rr % R] for rr in range(p0, p1)]),
-                time_masks[i0:i1], sched_eff.t_server, sched_eff.t_comm,
-                (timeline.quorum_wait[p0:p1].copy()
-                 if timeline is not None else None))
+                wmasks, sched_eff.t_server, sched_eff.t_comm, qw)
         upd = controller.update(r0, window, last_info) or {}
         changed = {k: v for k, v in upd.items() if getattr(sfl, k) != v}
         if not changed:
@@ -822,12 +931,17 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                            for j in range(R)])
             sched_eff = dataclasses.replace(
                 sched_eff, deadline=nd, masks=sched_eff.participation * nd)
-            for j, rr in enumerate(rows[i:], start=i):
-                time_masks[j] = sched_eff.masks[rr % R]
-            if timeline is None:
+            if sparse:
+                # future versions read the re-derived masks through the
+                # epoch list; past versions keep the masks they executed
+                mask_epochs.append((r0, sched_eff))
+            else:
+                for j, rr in enumerate(rows[i:], start=i):
+                    time_masks[j] = sched_eff.masks[rr % R]
+            if mode != "async":
                 for j, rr in enumerate(rows[i:], start=i):
                     masks[j] = mask_of(sched_eff, rr)
-        if timeline is not None:
+        if mode == "async":
             if {"quorum", "staleness_discount"} & set(changed):
                 raise ValueError(
                     "controllers cannot override quorum/staleness_discount "
@@ -835,16 +949,22 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                     "piecewise tau/deadline changes")
             if {"tau", "deadline"} & set(changed):
                 taus_v[r0:] = sfl.tau
-                if "deadline" in changed:
+                if sparse:
+                    # rebuild the stream and replay the (prefix-stable)
+                    # DES to r0 — already-flushed rows are untouched and
+                    # the ring state at r0 is reproduced exactly
+                    stream = _new_stream(r0)
+                else:
                     amask_rows[r0:] = np.stack(
-                        [sched_eff.masks[v % R] for v in range(r0, rounds)])
-                timeline = events.compile_timeline(
-                    sched_eff, rounds, quorum=sfl.quorum,
-                    discount=sfl.staleness_discount, tau=taus_v,
-                    mask_rows=amask_rows)
-                masks[i:] = timeline.apply_w[r0:rounds]
-                start_masks[i:] = timeline.start_mask[r0:rounds]
-                round_times[i:] = timeline.durations[r0:rounds]
+                        [sched_eff.masks[v % R]
+                         for v in range(r0, rounds)])
+                    timeline = events.compile_timeline(
+                        sched_eff, rounds, quorum=sfl.quorum,
+                        discount=sfl.staleness_discount, tau=taus_v,
+                        mask_rows=amask_rows)
+                    masks[i:] = timeline.apply_w[r0:rounds]
+                    start_masks[i:] = timeline.start_mask[r0:rounds]
+                    round_times[i:] = timeline.durations[r0:rounds]
             if "tau" in changed:
                 # the record store's τ axis is static per executable
                 state = events.resize_store(state, sfl.tau)
@@ -878,12 +998,14 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                 # in scan mode (flush above is per round here)
                 last_info = seg_info(r0, r1)
     else:
-        # fused on-device modes: 'scan' over schedule rows, 'async' over
-        # the compiled timeline's (start_mask, apply_w) rows with the
-        # in-flight record store carried as engine state — one loop, the
-        # modes differ only in the chunk body and its extra scanned input
-        make_fn = make_async_chunk_fn if mode == "async" else make_chunk_fn
+        # fused on-device modes: 'scan' over schedule rows, dense 'async'
+        # over the compiled timeline's (start_mask, apply_w) rows, sparse
+        # 'async' over streamed (C, k_max) commit batches — one loop, the
+        # modes differ only in the chunk body and its scanned inputs
+        make_fn = (make_sparse_chunk_fn if sparse else
+                   make_async_chunk_fn if mode == "async" else make_chunk_fn)
         params, state = _copy_tree(params), _copy_tree(state)
+        pending_rows: Optional[events.SparseRows] = None
         for si, (r0, r1) in enumerate(segments):
             if controller is not None:
                 controller_step(si)
@@ -892,11 +1014,34 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                 lambda sfl=sfl: jax.jit(make_fn(algo, cfg, sfl),
                                         donate_argnums=(0, 1)))
             i, C = r0 - start_round, r1 - r0
-            extra = ((jnp.asarray(start_masks[i:i + C]),)
-                     if mode == "async" else ())
-            params, state, mets = chunk_jit(
-                params, state, _stack_chunk(batch_fn, r0, C), *extra,
-                jnp.asarray(masks[i:i + C]), keys[i:i + C])
+            if sparse:
+                rows_c = (pending_rows if pending_rows is not None
+                          else stream.take(C))
+                pending_rows = None
+                masks[i:i + C] = rows_c.apply_w
+                round_times[i:i + C] = rows_c.durations
+                qwaits[i:i + C] = rows_c.quorum_wait
+                params, state, mets = chunk_jit(
+                    params, state,
+                    _stack_sparse_chunk(batch_fn, r0, rows_c.start_client),
+                    jnp.asarray(rows_c.start_client),
+                    jnp.asarray(rows_c.start_slot),
+                    jnp.asarray(rows_c.apply_slot),
+                    jnp.asarray(rows_c.apply_w), keys[i:i + C])
+                if controller is None and si + 1 < len(segments):
+                    # host/device overlap: JAX dispatch is async, so the
+                    # DES generates the NEXT chunk's events while the
+                    # device still scans this one (flush below is the
+                    # host-sync point). Controller runs can't prefetch —
+                    # the next boundary may rebuild the stream.
+                    n0, n1 = segments[si + 1]
+                    pending_rows = stream.take(n1 - n0)
+            else:
+                extra = ((jnp.asarray(start_masks[i:i + C]),)
+                         if mode == "async" else ())
+                params, state, mets = chunk_jit(
+                    params, state, _stack_chunk(batch_fn, r0, C), *extra,
+                    jnp.asarray(masks[i:i + C]), keys[i:i + C])
             flush(mets, r0, r1)
             if (checkpointer is not None and ckpt_every
                     and r1 % ckpt_every == 0 and r1 < rounds):

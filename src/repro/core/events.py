@@ -47,11 +47,24 @@ arrival is fetch_time + delay + t_comm·uplink_scale. Note this charges the
 uplink per arrival (the sync models charge the slowest active uplink once
 per round), which is the natural accounting once arrivals, not round
 maxima, pace the server.
+
+Two timeline backends share these semantics (SFLConfig.timeline):
+
+  'dense'   compile_timeline's (V, M) rows + the (M, τ, P) per-client
+            store — the small-M reference implementation.
+  'sparse'  the streaming path (TimelineStream / SparseRows below): a
+            heap-based DES emits (V, k_max) scatter/gather commit batches
+            chunk-by-chunk over a bounded arrival-slot ring store, so host
+            memory is O(k_max · chunk) + O(M) instead of O(V · M) and the
+            "K ≪ M arrivals per commit" fleet regime is simulable.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+import heapq
+from collections import OrderedDict
+from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
+                    Sequence, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -65,7 +78,10 @@ from repro.models import merge_params, split_params
 Params = Any
 
 __all__ = ["Timeline", "compile_timeline", "quorum_round_time",
-           "init_store", "resize_store", "async_mu_splitfed_step"]
+           "init_store", "resize_store", "async_mu_splitfed_step",
+           "SparseRows", "SparseTimeline", "TimelineStream",
+           "compile_sparse_timeline", "resolve_store_geometry",
+           "async_mu_splitfed_sparse_step"]
 
 
 # ---------------------------------------------------------------------------
@@ -165,7 +181,8 @@ def compile_timeline(schedule, n_versions: int, *, quorum: int = 0,
     if taus.shape != (V,):
         raise ValueError(f"tau_per_version shape {taus.shape} != ({V},)")
     if mask_rows is None:
-        mask_rows = np.stack([schedule.masks[v % R] for v in range(V)])
+        mask_rows = (np.stack([schedule.masks[v % R] for v in range(V)])
+                     if V else np.zeros((0, M), np.float32))
     mask_rows = np.asarray(mask_rows, np.float32)
     if mask_rows.shape != (V, M):
         raise ValueError(f"mask_rows shape {mask_rows.shape} != ({V}, {M})")
@@ -222,7 +239,8 @@ def compile_timeline(schedule, n_versions: int, *, quorum: int = 0,
         arr, origin = pending[m]
         events.append((arr, m, origin, -1, -1))
 
-    ev = np.array(events, np.float64).reshape(-1, 5)
+    ev = (np.array(events, np.float64) if events
+          else np.zeros((0, 5), np.float64))
     order = np.lexsort((ev[:, 1], ev[:, 0]))       # arrival, then client id
     ev = ev[order]
     client_id = ev[:, 1].astype(np.int64)
@@ -255,22 +273,457 @@ def quorum_round_time(delays: np.ndarray, mask: np.ndarray, t_server: float,
 
 
 # ---------------------------------------------------------------------------
+# sparse streaming timeline: heap DES -> (V, K) commit batches over an
+# arrival-slot ring store
+# ---------------------------------------------------------------------------
+#
+# The dense compiler above materializes (V, M) rows and re-sorts the whole
+# pending set every version — fine as the small-M reference, O(V·M) host
+# memory and O(V·M log M) time at fleet scale. The sparse path below keeps
+# the *identical* commit semantics but emits only what a commit actually
+# touches: per version, the <= K clients that start (scatter indices into a
+# bounded ring of record slots) and the <= K contributions that apply
+# (gather indices + staleness-discounted weights). The DES itself is a
+# min-heap over arrivals with lazy deletion, so a version costs
+# O(M) vectorized candidate scan + O((K + E_v) log M) heap work instead of
+# a full sort, and the engine consumes the rows chunk-by-chunk while the
+# device scans the previous chunk.
+#
+# Equivalence contract (gated in tests + bench_timeline --smoke): with
+# k_max >= M and capacity >= M there is no truncation and no eviction, and
+# SparseTimeline.densify() reproduces compile_timeline field-for-field;
+# the engine's sparse loss trajectory then matches the dense async path.
+
+
+def resolve_store_geometry(sfl: SFLConfig) -> Tuple[int, int]:
+    """(k_max, ring_capacity) for timeline='sparse'.
+
+    k_max bounds both the per-version start batch (fresh fetches admitted
+    at a broadcast) and the apply batch (records gathered per commit);
+    ring_capacity bounds the in-flight record store. Autos: with quorum=0
+    both default to M (every client can be in flight — exactly the dense
+    store, so the paths are bit-equivalent); with a quorum, k_max covers
+    the quorum plus opportunistic extras (4x, floor 16) and the ring holds
+    a staleness window of 8 commit batches. Neither ever exceeds M: a
+    client carries at most one in-flight contribution.
+    """
+    M = int(sfl.n_clients)
+    k = int(sfl.k_max)
+    if k <= 0:
+        k = M if sfl.quorum <= 0 else min(M, max(4 * int(sfl.quorum), 16))
+    k = min(k, M)
+    cap = int(sfl.ring_capacity)
+    if cap <= 0:
+        cap = M if sfl.quorum <= 0 else min(M, 8 * k)
+    return k, min(max(cap, k), M)
+
+
+class _VStep(NamedTuple):
+    """One simulated version, ragged (host-side only)."""
+    start_clients: List[int]
+    start_slots: List[int]
+    apply_clients: List[int]
+    apply_slots: List[int]
+    apply_stales: List[int]
+    apply_ws: List[float]
+    commit_time: float
+    duration: float
+    quorum_wait: float
+    evicted: int
+    skipped: int
+
+
+class _EventSim:
+    """The heap-based discrete-event core of the sparse timeline.
+
+    State: a min-heap of (arrival, client, token) with lazy deletion (a
+    token per contribution invalidates heap entries of evicted/committed
+    work), an insertion-ordered pending map (eviction order = start
+    order), a min-heap of free ring slots (lowest slot first, so
+    capacity >= M degenerates to the dense one-slot-per-client layout and
+    never evicts), and the (M,) busy vector for the vectorized candidate
+    scan. Deterministic and prefix-stable in exactly the dense compiler's
+    sense: same (quorum, discount, taus, masks) prefix -> same rows.
+    """
+
+    def __init__(self, n_clients: int, comm: np.ndarray, t_server: float,
+                 *, quorum: int, discount: float, k_max: int,
+                 capacity: int, collect_events: bool = False):
+        self.M = int(n_clients)
+        self.comm = np.asarray(comm, np.float64)
+        self.t_server = float(t_server)
+        self.quorum = int(quorum)
+        self.discount = float(discount)
+        self.k_max = int(k_max)
+        self.capacity = int(capacity)
+        self.t = 0.0
+        self.v = 0
+        self._token = 0
+        # client -> (arrival, origin, slot, token); insertion order = start
+        # order, which is the eviction order when the ring is full
+        self.pending: "OrderedDict[int, Tuple[float, int, int, int]]" = \
+            OrderedDict()
+        self.heap: List[Tuple[float, int, int]] = []
+        self.free = list(range(self.capacity))
+        heapq.heapify(self.free)
+        self.busy = np.zeros(self.M, bool)
+        self.events: Optional[List[Tuple[float, int, int, int, int]]] = \
+            [] if collect_events else None
+
+    def _drop(self, m: int) -> Tuple[float, int]:
+        """Remove client m's contribution; free its slot; return (arr, origin)."""
+        arr, origin, slot, _tok = self.pending.pop(m)
+        self.busy[m] = False
+        heapq.heappush(self.free, slot)
+        return arr, origin
+
+    def step(self, delay_row: np.ndarray, mask_row: np.ndarray,
+             tau: int) -> _VStep:
+        t, v = self.t, self.v
+        # broadcast: idle clients on the mask fetch and start, in client-id
+        # order (the dense compiler's iteration order), admitted up to the
+        # k_max batch width; the rest are skipped, not deferred — they may
+        # start at a later broadcast whose mask includes them
+        cand = np.flatnonzero((np.asarray(mask_row) > 0) & ~self.busy)
+        admitted = cand[:self.k_max]
+        skipped = int(cand.size - admitted.size)
+        start_clients: List[int] = []
+        start_slots: List[int] = []
+        evicted = 0
+        for m in admitted.tolist():
+            if not self.free:
+                # ring full: evict the oldest-started in-flight
+                # contribution (it never applies — counted, never silent)
+                em = next(iter(self.pending))
+                earr, eorigin = self._drop(em)
+                if self.events is not None:
+                    self.events.append((earr, em, eorigin, -1, -1))
+                evicted += 1
+            slot = heapq.heappop(self.free)
+            arr = t + float(delay_row[m]) + self.comm[m]
+            self._token += 1
+            self.pending[m] = (arr, v, slot, self._token)
+            heapq.heappush(self.heap, (arr, m, self._token))
+            self.busy[m] = True
+            start_clients.append(m)
+            start_slots.append(slot)
+        # quorum: pop the k earliest VALID arrivals (lazy deletion skips
+        # tokens of evicted work) — the k-th pop is the quorum arrival
+        n_pend = len(self.pending)
+        k = n_pend if self.quorum <= 0 else min(self.quorum, n_pend)
+        popped: List[Tuple[float, int]] = []
+        q_arrival = t
+        while self.heap and len(popped) < k:
+            arr, m, tok = heapq.heappop(self.heap)
+            cur = self.pending.get(m)
+            if cur is None or cur[3] != tok:
+                continue
+            popped.append((arr, m))
+            q_arrival = arr
+        quorum_wait = max(q_arrival - t, 0.0) if popped else 0.0
+        c_time = max(q_arrival, t + float(tau) * self.t_server)
+        # opportunistic extras: everything else delivered by the commit,
+        # up to the k_max batch width
+        while self.heap and len(popped) < self.k_max \
+                and self.heap[0][0] <= c_time:
+            arr, m, tok = heapq.heappop(self.heap)
+            cur = self.pending.get(m)
+            if cur is None or cur[3] != tok:
+                continue
+            popped.append((arr, m))
+        # overflow past the batch width (possible when quorum > k_max)
+        # defers: pushed back delivered, it folds into a later commit at
+        # discount**(staleness then) — never silently dropped
+        for arr, m in popped[self.k_max:]:
+            heapq.heappush(self.heap, (arr, m, self.pending[m][3]))
+        popped = popped[:self.k_max]
+        # apply in client-id order (dense: `for m in sorted(pending)`)
+        applied = []
+        for arr, m in popped:
+            _, origin, slot, _tok = self.pending[m]
+            self._drop(m)
+            applied.append((m, slot, v - origin, arr, origin))
+        applied.sort()
+        ws = [self.discount ** s for _, _, s, _, _ in applied]
+        tot = float(np.sum(np.asarray(ws))) if ws else 0.0
+        if tot > 0:
+            ws = [w / tot for w in ws]
+        if self.events is not None:
+            for (m, _slot, s, arr, origin), _w in zip(applied, ws):
+                self.events.append((arr, m, origin, s, v))
+        self.t, self.v = c_time, v + 1
+        return _VStep(
+            start_clients=start_clients, start_slots=start_slots,
+            apply_clients=[a[0] for a in applied],
+            apply_slots=[a[1] for a in applied],
+            apply_stales=[a[2] for a in applied], apply_ws=ws,
+            commit_time=c_time, duration=c_time - t,
+            quorum_wait=quorum_wait, evicted=evicted, skipped=skipped)
+
+    def finalize_events(self) -> List[Tuple[float, int, int, int, int]]:
+        """Contributions still in flight at the horizon (delivered to
+        nobody), appended to the collected event list."""
+        assert self.events is not None
+        for m in sorted(self.pending):
+            arr, origin, _slot, _tok = self.pending[m]
+            self.events.append((arr, m, origin, -1, -1))
+        return self.events
+
+
+class SparseRows(NamedTuple):
+    """(C, K)-padded sparse commit rows for C consecutive versions.
+
+    Pad conventions are chosen for JAX's out-of-bounds semantics so the
+    device step needs no masking: start_client / apply_client pad -1 (the
+    step clips to 0 for key fold-in and batch gather — the row is inert
+    because its slot/weight pads make it so); start_slot pads `capacity`
+    (scatter mode='drop' discards the row); apply_slot pads `capacity`
+    (gather clamps to the last slot, multiplied by apply_w's 0 pad).
+    """
+    start_client: np.ndarray     # (C, Ks) i64, pad -1
+    start_slot: np.ndarray       # (C, Ks) i64, pad = capacity
+    apply_client: np.ndarray     # (C, Ka) i64, pad -1
+    apply_slot: np.ndarray       # (C, Ka) i64, pad = capacity
+    apply_stale: np.ndarray      # (C, Ka) i64, pad -1
+    apply_w: np.ndarray          # (C, Ka) f32, pad 0
+    commit_times: np.ndarray     # (C,) f64
+    durations: np.ndarray        # (C,) f64
+    quorum_wait: np.ndarray      # (C,) f64
+    applied: np.ndarray          # (C,) i64
+    started: np.ndarray          # (C,) i64
+    evicted: np.ndarray          # (C,) i64
+    skipped: np.ndarray          # (C,) i64
+
+
+def _pack_rows(steps: Sequence[_VStep], k_start: int, k_apply: int,
+               capacity: int) -> SparseRows:
+    C = len(steps)
+    sc = np.full((C, k_start), -1, np.int64)
+    ss = np.full((C, k_start), capacity, np.int64)
+    ac = np.full((C, k_apply), -1, np.int64)
+    asl = np.full((C, k_apply), capacity, np.int64)
+    ast = np.full((C, k_apply), -1, np.int64)
+    aw = np.zeros((C, k_apply), np.float32)
+    for i, s in enumerate(steps):
+        ns, na = len(s.start_clients), len(s.apply_clients)
+        sc[i, :ns] = s.start_clients
+        ss[i, :ns] = s.start_slots
+        ac[i, :na] = s.apply_clients
+        asl[i, :na] = s.apply_slots
+        ast[i, :na] = s.apply_stales
+        aw[i, :na] = np.asarray(s.apply_ws, np.float64).astype(np.float32) \
+            if na else 0.0
+    return SparseRows(
+        start_client=sc, start_slot=ss, apply_client=ac, apply_slot=asl,
+        apply_stale=ast, apply_w=aw,
+        commit_times=np.array([s.commit_time for s in steps], np.float64),
+        durations=np.array([s.duration for s in steps], np.float64),
+        quorum_wait=np.array([s.quorum_wait for s in steps], np.float64),
+        applied=np.array([len(s.apply_clients) for s in steps], np.int64),
+        started=np.array([len(s.start_clients) for s in steps], np.int64),
+        evicted=np.array([s.evicted for s in steps], np.int64),
+        skipped=np.array([s.skipped for s in steps], np.int64))
+
+
+def _comm_of(schedule) -> np.ndarray:
+    M = schedule.delays.shape[1]
+    comm = np.full(M, schedule.t_comm, np.float64)
+    if schedule.t_comm_scale is not None:
+        comm = schedule.t_comm * np.asarray(schedule.t_comm_scale, np.float64)
+    return comm
+
+
+class TimelineStream:
+    """Chunk-streamed sparse timeline.
+
+    The engine pulls ``take(C)`` (C, K) commit-batch rows while the device
+    scans the previous chunk — the (V, ·) trace never materializes on the
+    host. ``skip(n)`` advances the simulation without building rows (the
+    engine replays the prefix on resume and on controller re-plans, which
+    is what makes the stream prefix-stable in the dense compiler's sense:
+    rebuild with the same knob prefix + skip(v) == the original stream at
+    v, ring state included).
+
+    taus may be a live (n_versions,) array a controller mutates for
+    versions not yet taken; mask_row_fn(v) -> (M,) overrides the cyclic
+    schedule masks (the engine uses it for deadline re-plans).
+    """
+
+    def __init__(self, schedule, n_versions: int, *, quorum: int,
+                 discount: float, taus, k_max: int, capacity: int,
+                 mask_row_fn: Optional[Callable[[int], np.ndarray]] = None,
+                 collect_events: bool = False):
+        self.schedule = schedule
+        self.R, self.M = schedule.delays.shape
+        self.n_versions = int(n_versions)
+        self.taus = (np.full(self.n_versions, taus, np.int64)
+                     if np.ndim(taus) == 0 else np.asarray(taus))
+        if self.taus.shape != (self.n_versions,):
+            raise ValueError(
+                f"taus shape {self.taus.shape} != ({self.n_versions},)")
+        self.k_max = int(k_max)
+        self.capacity = int(capacity)
+        self.mask_row_fn = mask_row_fn
+        self.sim = _EventSim(
+            self.M, _comm_of(schedule), schedule.t_server, quorum=quorum,
+            discount=discount, k_max=k_max, capacity=capacity,
+            collect_events=collect_events)
+
+    @property
+    def v(self) -> int:
+        return self.sim.v
+
+    def _step(self) -> _VStep:
+        v = self.sim.v
+        if v >= self.n_versions:
+            raise ValueError(f"stream exhausted at version {v}")
+        mask = (self.mask_row_fn(v) if self.mask_row_fn is not None
+                else self.schedule.masks[v % self.R])
+        return self.sim.step(self.schedule.delays[v % self.R], mask,
+                             int(self.taus[v]))
+
+    def skip(self, n: int) -> None:
+        for _ in range(int(n)):
+            self._step()
+
+    def take(self, n: int) -> SparseRows:
+        n = min(int(n), self.n_versions - self.sim.v)
+        return _pack_rows([self._step() for _ in range(n)],
+                          self.k_max, self.k_max, self.capacity)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseTimeline:
+    """A fully-compiled sparse trace: SparseRows over all V versions plus
+    the flat arrival-ordered event view (same columns as Timeline) and the
+    run config. ``densify()`` expands back to the dense Timeline — the
+    equivalence gate compares that against compile_timeline field-for-
+    field (exact when nothing was truncated or evicted, i.e. k_max and
+    capacity >= M)."""
+    rows: SparseRows
+    arrival_time: np.ndarray
+    client_id: np.ndarray
+    cohort_id: np.ndarray
+    round_of_origin: np.ndarray
+    staleness: np.ndarray
+    commit_idx: np.ndarray
+    quorum: int
+    discount: float
+    tau_per_version: np.ndarray
+    n_clients: int
+    capacity: int
+
+    @property
+    def n_versions(self) -> int:
+        return self.rows.start_client.shape[0]
+
+    @property
+    def n_events(self) -> int:
+        return self.arrival_time.shape[0]
+
+    def densify(self) -> Timeline:
+        V, M, r = self.n_versions, self.n_clients, self.rows
+        start_mask = np.zeros((V, M), np.float32)
+        apply_w = np.zeros((V, M), np.float32)
+        staleness_m = np.full((V, M), -1, np.int64)
+        for v in range(V):
+            sc = r.start_client[v]
+            start_mask[v, sc[sc >= 0]] = 1.0
+            live = r.apply_client[v] >= 0
+            ac = r.apply_client[v][live]
+            apply_w[v, ac] = r.apply_w[v][live]
+            staleness_m[v, ac] = r.apply_stale[v][live]
+        return Timeline(
+            arrival_time=self.arrival_time, client_id=self.client_id,
+            cohort_id=self.cohort_id,
+            round_of_origin=self.round_of_origin, staleness=self.staleness,
+            commit_idx=self.commit_idx, start_mask=start_mask,
+            apply_w=apply_w, staleness_m=staleness_m,
+            commit_times=r.commit_times, durations=r.durations,
+            quorum_wait=r.quorum_wait, applied=r.applied,
+            quorum=self.quorum, discount=self.discount,
+            tau_per_version=self.tau_per_version)
+
+
+def compile_sparse_timeline(schedule, n_versions: int, *, quorum: int = 0,
+                            discount: float = 1.0, tau=1,
+                            mask_rows: Optional[np.ndarray] = None,
+                            k_max: Optional[int] = None,
+                            capacity: Optional[int] = None) -> SparseTimeline:
+    """Sparse counterpart of compile_timeline — same knobs, heap DES,
+    (V, K) rows. k_max/capacity None = M (no truncation, no eviction:
+    densify() reproduces the dense compiler exactly). Row widths are the
+    realized maxima when k_max is None, else k_max."""
+    R, M = schedule.delays.shape
+    V = int(n_versions)
+    taus = np.full(V, tau, np.int64) if np.ndim(tau) == 0 else \
+        np.asarray(tau, np.int64)
+    if taus.shape != (V,):
+        raise ValueError(f"tau_per_version shape {taus.shape} != ({V},)")
+    if mask_rows is not None:
+        mask_rows = np.asarray(mask_rows, np.float32)
+        if mask_rows.shape != (V, M):
+            raise ValueError(
+                f"mask_rows shape {mask_rows.shape} != ({V}, {M})")
+    exact = k_max is None
+    k = M if exact else int(k_max)
+    cap = M if capacity is None else int(capacity)
+    sim = _EventSim(M, _comm_of(schedule), schedule.t_server, quorum=quorum,
+                    discount=discount, k_max=k, capacity=cap,
+                    collect_events=True)
+    steps = []
+    for v in range(V):
+        mask = mask_rows[v] if mask_rows is not None \
+            else schedule.masks[v % R]
+        steps.append(sim.step(schedule.delays[v % R], mask, int(taus[v])))
+    if exact:
+        k_start = max([1] + [len(s.start_clients) for s in steps])
+        k_apply = max([1] + [len(s.apply_clients) for s in steps])
+    else:
+        k_start = k_apply = k
+    rows = _pack_rows(steps, k_start, k_apply, cap)
+    ev = np.array(sim.finalize_events(), np.float64) \
+        if sim.events else np.zeros((0, 5), np.float64)
+    order = np.lexsort((ev[:, 1], ev[:, 0]))
+    ev = ev[order]
+    client_id = ev[:, 1].astype(np.int64)
+    cohorts = (schedule.population.cohort_ids()
+               if getattr(schedule, "population", None) is not None
+               else np.zeros(M, np.int64))
+    return SparseTimeline(
+        rows=rows, arrival_time=ev[:, 0], client_id=client_id,
+        cohort_id=cohorts[client_id],
+        round_of_origin=ev[:, 2].astype(np.int64),
+        staleness=ev[:, 3].astype(np.int64),
+        commit_idx=ev[:, 4].astype(np.int64),
+        quorum=int(quorum), discount=float(discount), tau_per_version=taus,
+        n_clients=M, capacity=cap)
+
+
+# ---------------------------------------------------------------------------
 # the jit'd per-version step: fixed-shape record store + quorum commit
 # ---------------------------------------------------------------------------
 
 def init_store(sfl: SFLConfig) -> Dict[str, jax.Array]:
-    """The in-flight contribution buffer: one slot per client (a client
-    computes at most one contribution at a time), each slot the replayable
+    """The in-flight contribution buffer, each slot the replayable
     seed-record wire format of a full MU-SplitFed contribution — (τ, P)
     server records, the client (key, coeff) pair, and the fetch-time loss
-    metric. Zero coeffs make an empty/consumed slot replay-inert."""
+    metric. Zero coeffs make an empty/consumed slot replay-inert.
+
+    Layout follows sfl.timeline: 'dense' keys slots by client id (M slots
+    — a client computes at most one contribution at a time); 'sparse' is
+    the bounded arrival-slot ring (resolve_store_geometry's capacity), the
+    timeline stream owning the slot <-> contribution mapping."""
     M, T, P = sfl.n_clients, sfl.tau, sfl.n_perturbations
+    lead = M
+    if getattr(sfl, "timeline", "dense") == "sparse":
+        lead = resolve_store_geometry(sfl)[1]
     return {
-        "srv_keys": jnp.zeros((M, T, P, 2), jnp.uint32),
-        "srv_coeffs": jnp.zeros((M, T, P), jnp.float32),
-        "ukey": jnp.zeros((M, 2), jnp.uint32),
-        "ccoeff": jnp.zeros((M,), jnp.float32),
-        "loss0": jnp.zeros((M,), jnp.float32),
+        "srv_keys": jnp.zeros((lead, T, P, 2), jnp.uint32),
+        "srv_coeffs": jnp.zeros((lead, T, P), jnp.float32),
+        "ukey": jnp.zeros((lead, 2), jnp.uint32),
+        "ccoeff": jnp.zeros((lead,), jnp.float32),
+        "loss0": jnp.zeros((lead,), jnp.float32),
     }
 
 
@@ -335,4 +788,49 @@ def async_mu_splitfed_step(cfg: ModelConfig, sfl: SFLConfig, params: Params,
     xc_new = zo.replay_weighted_records(xc, store["ukey"], store["ccoeff"],
                                         w, sfl.perturbation_dist, impl=replay)
     metrics = {"loss": store["loss0"]}
+    return merge_params(cfg, xc_new, xs_new), store, metrics
+
+
+def async_mu_splitfed_sparse_step(cfg: ModelConfig, sfl: SFLConfig,
+                                  params: Params,
+                                  store: Dict[str, jax.Array], batches,
+                                  start_client: jax.Array,
+                                  start_slot: jax.Array,
+                                  apply_slot: jax.Array,
+                                  apply_w: jax.Array, version_key, *,
+                                  replay: str = "auto",
+                                  eval_loss: bool = True):
+    """One server version over the arrival-slot ring store (pure/jit-able).
+
+    The sparse twin of async_mu_splitfed_step: the device only ever sees
+    the K rows a version touches. ``batches`` are PRE-GATHERED (K, ...)
+    rows of the starting clients (the host stream gathered them — no
+    (M, ...) batch is uploaded). start_client (K,) derives the per-client
+    fold-in keys, so a starting client's records are bit-identical to the
+    dense path's; start_slot (K,) scatters the fresh records into the ring
+    (pad = capacity is dropped). apply_slot/apply_w (K,) gather this
+    commit's records for one fused weighted replay — pads gather a real
+    slot (clamped) but carry weight 0, which zeroes their coefficients, so
+    they are replay-inert just like the dense path's w=0 rows.
+    """
+    xc, xs = split_params(cfg, params, sfl.cut_units)
+    cid = jnp.clip(start_client, 0, sfl.n_clients - 1)
+    mkeys = jax.vmap(lambda i: jax.random.fold_in(version_key, i))(cid)
+    out = jax.vmap(lambda b, k: _client_round(cfg, sfl, xc, xs, b, k,
+                                              eval_loss, replay)
+                   )(batches, mkeys)
+    fresh = {"srv_keys": out["srv_keys"], "srv_coeffs": out["srv_coeffs"],
+             "ukey": out["ukey"], "ccoeff": out["ccoeff"],
+             "loss0": out["loss0"]}
+    store = {name: store[name].at[start_slot].set(val, mode="drop")
+             for name, val in fresh.items()}
+    w = (sfl.lr_global * apply_w).astype(jnp.float32)
+    gather = lambda a: jnp.take(a, apply_slot, axis=0, mode="clip")
+    xs_new = zo.replay_weighted_records(xs, gather(store["srv_keys"]),
+                                        gather(store["srv_coeffs"]), w,
+                                        sfl.perturbation_dist, impl=replay)
+    xc_new = zo.replay_weighted_records(xc, gather(store["ukey"]),
+                                        gather(store["ccoeff"]), w,
+                                        sfl.perturbation_dist, impl=replay)
+    metrics = {"loss": gather(store["loss0"])}
     return merge_params(cfg, xc_new, xs_new), store, metrics

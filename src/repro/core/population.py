@@ -26,7 +26,7 @@ reproduces the historical schedule RNG draws bit-for-bit
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -145,6 +145,24 @@ class ClientPopulation:
     @property
     def uniform_comm(self) -> bool:
         return all(c.t_comm_scale == 1.0 for c in self.cohorts)
+
+    def client_vectors(self) -> Dict[str, np.ndarray]:
+        """The fleet's per-client (M,) system vectors, expanded from the
+        cohort spec — everything about population state that scales with
+        M. This is the sharding surface: sharding/specs.population_pspecs
+        lays these out over the mesh 'data' axis (the ring store's slot
+        dim rides the same axis), so fleet vectors never have to fit one
+        host/device past small M."""
+        def expand(field, dtype):
+            return np.concatenate([np.full(c.n, field(c), dtype)
+                                   for c in self.cohorts])
+        return {
+            "cohort_id": self.cohort_ids(),
+            "t_comm_scale": self.t_comm_scales(),
+            "delay_base": expand(lambda c: c.delay.base, np.float64),
+            "delay_scale": expand(lambda c: c.delay.scale, np.float64),
+            "participation": expand(lambda c: c.participation, np.float64),
+        }
 
     def sampler(self) -> "PopulationSampler":
         return PopulationSampler(self)

@@ -20,7 +20,7 @@ from repro.core.population import (ClientPopulation, Cohort, DelayModel,
 
 __all__ = [
     "DelayModel", "Cohort", "ClientPopulation", "parse_population",
-    "Schedule", "make_schedule", "participation_mask",
+    "Schedule", "make_schedule", "make_schedule_stream", "participation_mask",
     "deadline_mask", "median_fresh_mask", "plan_tau",
     "round_time_mu_splitfed", "round_time_vanilla", "round_time_gas",
     "round_time_local_only", "WallClock", "simulate_total_time",
@@ -142,32 +142,93 @@ def make_schedule(seed: int, n_rounds: int, n_clients: Optional[int] = None,
     path bit-for-bit (tests/test_engine.py + tests/test_population.py pin
     this). Deterministic in (seed, n_rounds, population, knobs).
     """
-    if population is None:
-        if n_clients is None:
-            raise ValueError("make_schedule: pass n_clients or population")
-        population = ClientPopulation.single(
-            n_clients,
-            delay=delay_model or DelayModel(base=1.0, scale=straggler_scale),
-            participation=participation)
-    elif n_clients is not None and n_clients != population.n_clients:
-        raise ValueError(f"n_clients={n_clients} != population's "
-                         f"{population.n_clients}")
+    population = _resolve_population(population, n_clients, delay_model,
+                                     straggler_scale, participation)
     M = population.n_clients
-    rng = np.random.default_rng(seed)
-    sampler = population.sampler()
-    delays = np.empty((n_rounds, M), np.float64)
-    parts = np.empty((n_rounds, M), np.float32)
-    for r in range(n_rounds):
-        delays[r] = sampler.delays_row(rng)
-        parts[r] = sampler.participation_row(rng)
-    dead = np.stack([deadline_mask(delays[r], deadline)
-                     for r in range(n_rounds)])
-    return Schedule(delays=delays, participation=parts, deadline=dead,
-                    masks=parts * dead, fresh_median=median_fresh_mask(delays),
+    chunks = list(make_schedule_stream(
+        seed, n_rounds, population=population, deadline=deadline,
+        t_server=t_server, t_gen=t_gen, t_comm=t_comm))
+
+    def cat(field, dtype, width=M):
+        if not chunks:
+            return np.zeros((0, width), dtype)
+        return np.concatenate([getattr(c, field) for c in chunks])
+
+    return Schedule(delays=cat("delays", np.float64),
+                    participation=cat("participation", np.float32),
+                    deadline=cat("deadline", np.float32),
+                    masks=cat("masks", np.float32),
+                    fresh_median=cat("fresh_median", np.float32),
                     seed=seed, t_server=t_server, t_gen=t_gen, t_comm=t_comm,
                     t_comm_scale=(None if population.uniform_comm
                                   else population.t_comm_scales()),
                     population=population)
+
+
+def _resolve_population(population, n_clients, delay_model, straggler_scale,
+                        participation) -> ClientPopulation:
+    if population is None:
+        if n_clients is None:
+            raise ValueError("make_schedule: pass n_clients or population")
+        return ClientPopulation.single(
+            n_clients,
+            delay=delay_model or DelayModel(base=1.0, scale=straggler_scale),
+            participation=participation)
+    if n_clients is not None and n_clients != population.n_clients:
+        raise ValueError(f"n_clients={n_clients} != population's "
+                         f"{population.n_clients}")
+    return population
+
+
+def make_schedule_stream(seed: int, n_rounds: int,
+                         n_clients: Optional[int] = None,
+                         *,
+                         population: Optional[ClientPopulation] = None,
+                         delay_model: Optional[DelayModel] = None,
+                         straggler_scale: float = 0.0,
+                         participation: float = 1.0,
+                         deadline: float = 0.0,
+                         t_server: float = 0.1,
+                         t_gen: float = 0.0,
+                         t_comm: float = 0.0,
+                         chunk_rounds: int = 64):
+    """Stream the system-model trace as Schedule chunks of ``chunk_rounds``
+    rows each (the last chunk may be shorter).
+
+    One shared PopulationSampler draws rows in round order — delay row
+    first, then participation, cohort by cohort — so the chunked stream
+    consumes the RNG exactly like the monolithic loop: concatenating the
+    yielded chunks reproduces make_schedule(...) bit-for-bit. The pinning
+    is structural: make_schedule IS the concatenation of this generator
+    (and tests/test_population.py cross-checks odd chunk sizes). Each
+    chunk is a full Schedule carrying the shared scalar knobs, so row
+    consumers (the sparse TimelineStream, bench_timeline) can work on
+    fleets whose full (R, M) trace would not fit on the host.
+    """
+    population = _resolve_population(population, n_clients, delay_model,
+                                     straggler_scale, participation)
+    M = population.n_clients
+    rng = np.random.default_rng(seed)
+    sampler = population.sampler()
+    t_comm_scale = (None if population.uniform_comm
+                    else population.t_comm_scales())
+    done = 0
+    while done < n_rounds:
+        C = min(int(chunk_rounds), n_rounds - done)
+        delays = np.empty((C, M), np.float64)
+        parts = np.empty((C, M), np.float32)
+        for r in range(C):
+            delays[r] = sampler.delays_row(rng)
+            parts[r] = sampler.participation_row(rng)
+        dead = np.stack([deadline_mask(delays[r], deadline)
+                         for r in range(C)])
+        yield Schedule(delays=delays, participation=parts, deadline=dead,
+                       masks=parts * dead,
+                       fresh_median=median_fresh_mask(delays),
+                       seed=seed, t_server=t_server, t_gen=t_gen,
+                       t_comm=t_comm, t_comm_scale=t_comm_scale,
+                       population=population)
+        done += C
 
 
 # ---------------------------------------------------------------------------

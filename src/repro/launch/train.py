@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.ckpt import Checkpointer
 from repro.configs import SFLConfig, get_config
-from repro.core import engine
+from repro.core import engine, events
 from repro.core import straggler as strag
 from repro.data import FederatedLoader, SyntheticLM, dirichlet_partition
 from repro.models import init_params, untie_params
@@ -67,6 +67,19 @@ def main(argv=None):
                     help="weight base for stale contributions: a record "
                          "applied s commits after its fetch weighs "
                          "discount**s before per-commit normalization")
+    ap.add_argument("--timeline", default="dense",
+                    choices=["dense", "sparse"],
+                    help="async timeline backend: 'dense' precompiles "
+                         "(V, M) rows (small-M reference); 'sparse' "
+                         "streams (chunk, k_max) commit batches over an "
+                         "arrival-slot ring store — pick it for large "
+                         "fleets (quorum K << M)")
+    ap.add_argument("--k-max", type=int, default=0,
+                    help="sparse timeline: per-version commit-batch width "
+                         "(0 = auto: 4x quorum, floor 16, capped at M)")
+    ap.add_argument("--ring-capacity", type=int, default=0,
+                    help="sparse timeline: in-flight record slots (0 = "
+                         "auto: an 8-batch staleness window, capped at M)")
     ap.add_argument("--adaptive-tau", action="store_true",
                     help="re-plan tau at chunk boundaries from the observed "
                          "straggler gap (engine.AdaptiveTau; --tau is the "
@@ -121,6 +134,9 @@ def main(argv=None):
             raise SystemExit("--quorum/--staleness-discount only take "
                              "effect under --async (the synchronous modes "
                              "never read them)")
+        if args.timeline != "dense":
+            ap.error("--timeline sparse is the semi-async streaming "
+                     "backend; it requires --async")
         if args.loop is None:
             args.loop = "scan"
         if args.aggregation is None:
@@ -133,6 +149,17 @@ def main(argv=None):
         args.population, straggler_scale=args.straggler_scale)
         if args.population else None)
     n_clients = population.n_clients if population else args.clients
+    # validate the semi-async policy knobs against the RESOLVED fleet size
+    # (an oversized quorum used to be silently clamped inside the DES)
+    if args.quorum < 0 or args.quorum > n_clients:
+        ap.error(f"--quorum must be in [0, n_clients]: got {args.quorum} "
+                 f"with n_clients={n_clients} (0 = wait for all pending)")
+    if not 0.0 <= args.staleness_discount <= 1.0:
+        ap.error(f"--staleness-discount must be in [0.0, 1.0]: got "
+                 f"{args.staleness_discount} (weight base per missed "
+                 f"commit)")
+    if args.k_max < 0 or args.ring_capacity < 0:
+        ap.error("--k-max/--ring-capacity must be >= 0 (0 = auto)")
     if population is not None:
         print(f"population: {population.describe()}  (M={n_clients})")
     sfl = SFLConfig(n_clients=n_clients, tau=args.tau,
@@ -142,7 +169,9 @@ def main(argv=None):
                     straggler_rate=args.straggler_scale,
                     deadline=args.deadline, population=population,
                     quorum=args.quorum,
-                    staleness_discount=args.staleness_discount)
+                    staleness_discount=args.staleness_discount,
+                    timeline=args.timeline, k_max=args.k_max,
+                    ring_capacity=args.ring_capacity)
     key = jax.random.PRNGKey(args.seed)
     params = untie_params(cfg, init_params(cfg, key))
 
@@ -162,7 +191,11 @@ def main(argv=None):
         if args.algorithm == "gas" else {}))
     if args.run_async:
         print(f"semi-async: quorum {args.quorum or 'all'} of {n_clients}, "
-              f"staleness discount {args.staleness_discount}")
+              f"staleness discount {args.staleness_discount}, "
+              f"timeline {args.timeline}" + (
+                  " (k_max {}, ring {})".format(
+                      *events.resolve_store_geometry(sfl))
+                  if args.timeline == "sparse" else ""))
 
     controller = (engine.AdaptiveTau(tau_max=args.tau_max)
                   if args.adaptive_tau else None)

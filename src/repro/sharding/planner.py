@@ -44,6 +44,52 @@ def model_bytes(cfg: ModelConfig) -> int:
     return 2 * (d_c + d_s)            # bf16
 
 
+@dataclasses.dataclass(frozen=True)
+class EventStorePlan:
+    """Placement of fleet-scaling semi-async state on the mesh.
+
+    slot_axis   mesh axis for the record store's leading slot dim (the
+                arrival-slot ring under timeline='sparse', client id under
+                'dense'); None replicates.
+    client_axis mesh axis for the population's (M,) client vectors.
+    Both default to 'data' — the ring and the fleet live where the batch
+    does — and fall back to replication when the dim doesn't divide the
+    axis (pjit rejects uneven shardings). ``bytes_per_device`` is the
+    store estimate backing the decision.
+    """
+    slot_axis: Optional[str]
+    client_axis: Optional[str]
+    capacity: int
+    n_clients: int
+    bytes_per_device: int
+
+
+def store_bytes(capacity: int, tau: int, n_pert: int) -> int:
+    """Record-store footprint: (cap, τ, P, 2) u32 keys + (cap, τ, P) f32
+    coeffs + the (cap,) client key/coeff/loss columns."""
+    return capacity * (tau * n_pert * 12 + 16)
+
+
+def plan_event_store(capacity: int, n_clients: int, mesh: MeshConfig,
+                     *, tau: int = 1, n_pert: int = 1) -> EventStorePlan:
+    """Decide 'data'-axis sharding for the ring store + population vectors.
+
+    The slot dim shards over 'data' when it divides the axis size (the
+    sparse step's gather/scatter over slot indices stays a GSPMD-lowered
+    collective either way — the spec is a layout hint, never a semantics
+    change), and likewise the client dim of the cohort vectors.
+    """
+    sizes = dict(zip(mesh.axes, mesh.shape))
+    data = sizes.get("data", 1)
+    slot_axis = "data" if data > 1 and capacity % data == 0 else None
+    client_axis = "data" if data > 1 and n_clients % data == 0 else None
+    per_dev = store_bytes(capacity, tau, n_pert) // (
+        data if slot_axis else 1)
+    return EventStorePlan(slot_axis=slot_axis, client_axis=client_axis,
+                          capacity=capacity, n_clients=n_clients,
+                          bytes_per_device=per_dev)
+
+
 def plan_for(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
              aggregation: str = "dense", replay: str = "auto") -> Plan:
     tp = mesh.shape[-1]

@@ -19,6 +19,7 @@ from __future__ import annotations
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -104,6 +105,34 @@ def param_pspecs(cfg: ModelConfig, shapes: Any, *, fsdp: Optional[Any] = None,
         return P(*lead, *((None,) * len(dims)))
 
     return jax.tree_util.tree_map_with_path(rule, shapes)
+
+
+def population_pspecs(vectors: Dict[str, Any], *, client_axis="data",
+                      axis_sizes: Optional[Dict[str, int]] = None
+                      ) -> Dict[str, P]:
+    """Specs for ClientPopulation.client_vectors(): every (M,) fleet
+    vector shards its client dim over ``client_axis`` (divisibility-
+    guarded — uneven fleets replicate). Trailing dims, if a caller stacks
+    per-client features, replicate."""
+    sizes = axis_sizes or DEFAULT_AXIS_SIZES
+    return {name: P(_guard(np.shape(v)[0], client_axis, sizes),
+                    *((None,) * (np.ndim(v) - 1)))
+            for name, v in vectors.items()}
+
+
+def event_store_pspecs(store: Dict[str, Any], *, slot_axis="data",
+                       axis_sizes: Optional[Dict[str, int]] = None
+                       ) -> Dict[str, P]:
+    """Specs for the semi-async record store (events.init_store): the
+    leading slot dim — client id in the dense layout, arrival slot in the
+    ring layout — shards over ``slot_axis``; the record axes (τ, P, key
+    words) replicate. The sparse step's scatter/gather over slot indices
+    lowers to GSPMD collectives against this layout, so the in-flight
+    buffer scales with the fleet instead of one device's memory."""
+    sizes = axis_sizes or DEFAULT_AXIS_SIZES
+    return {name: P(_guard(np.shape(v)[0], slot_axis, sizes),
+                    *((None,) * (np.ndim(v) - 1)))
+            for name, v in store.items()}
 
 
 def batch_pspec(kind: str, multi_pod: bool, *, stacked_clients: bool) -> P:

@@ -315,3 +315,211 @@ def test_adaptive_tau_consumes_async_window(setup):
     assert res.tau_per_round.tolist() == [1, 1] + [want] * (ROUNDS - 2)
     # re-planned τ re-paced the committed versions (timeline recompiled)
     assert res.round_times[-1] == pytest.approx(max(0.3, want * 0.1))
+
+
+# ---------------------------------------------------------------------------
+# sparse streaming timeline: V=0 regression, densify == dense, the chunked
+# stream, ring geometry, and the sparse engine path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("compile_fn", [
+    events.compile_timeline,
+    lambda *a, **k: events.compile_sparse_timeline(*a, **k).densify()])
+def test_compile_timeline_v0_is_empty_not_a_crash(compile_fn):
+    """Regression: V=0 (and the no-events path it implies) used to crash
+    np.stack on an empty mask list; both backends must return empty,
+    well-shaped rows."""
+    sched = strag.make_schedule(0, 4, M, straggler_scale=1.0, t_server=0.1)
+    tl = compile_fn(sched, 0, quorum=2, discount=0.5, tau=2)
+    assert tl.start_mask.shape == (0, M)
+    assert tl.apply_w.shape == (0, M)
+    assert tl.commit_times.shape == (0,)
+    assert tl.client_id.shape == (0,)
+    assert tl.tau_per_version.shape == (0,)
+
+
+@pytest.mark.parametrize("quorum,discount", [(0, 1.0), (3, 1.0), (3, 0.5),
+                                             (2, 0.25)])
+def test_sparse_densify_matches_dense(setup, quorum, discount):
+    """At exact geometry (k_max = capacity = M) the heap DES reproduces the
+    dense compiler field-for-field — the refactor's bit-equivalence gate."""
+    _, _, _, sched, _, _ = setup
+    taus = 1 + (np.arange(10) % 3)
+    dense = events.compile_timeline(sched, 10, quorum=quorum,
+                                    discount=discount, tau=taus)
+    got = events.compile_sparse_timeline(sched, 10, quorum=quorum,
+                                         discount=discount, tau=taus)
+    for f in dataclasses.fields(dense):
+        va = getattr(dense, f.name)
+        if isinstance(va, np.ndarray):
+            assert np.array_equal(va, getattr(got.densify(), f.name)), f.name
+
+
+def test_stream_chunked_take_and_skip_match_compile(setup):
+    """TimelineStream is the incremental view of the same DES: chunked
+    take() concatenates to the one-shot rows, and skip(r0) replays the
+    prefix so take() resumes bit-identically (what checkpoint resume and
+    controller re-plans rely on)."""
+    _, _, _, sched, _, _ = setup
+    V, kw = 12, dict(quorum=3, discount=0.5, taus=2, k_max=M, capacity=M)
+    whole = events.TimelineStream(sched, V, **kw).take(V)
+    st = events.TimelineStream(sched, V, **kw)
+    chunks = [st.take(5), st.take(5), st.take(2)]
+    for f in whole._fields:
+        want = getattr(whole, f)
+        got = np.concatenate([getattr(c, f) for c in chunks])
+        assert np.array_equal(want, got), f
+    skipped = events.TimelineStream(sched, V, **kw)
+    skipped.skip(7)
+    tail = skipped.take(5)
+    for f in whole._fields:
+        assert np.array_equal(getattr(whole, f)[7:], getattr(tail, f)), f
+
+
+def test_bounded_ring_evicts_oldest_and_truncates_to_k_max():
+    """Forced-tight geometry: starts/applies clip at the k_max batch
+    width (overflow counted as skipped / deferred, never silent) and a
+    full ring evicts the oldest-started in-flight record."""
+    # slow tier FIRST: ids 0-1 are admitted at v0, park in ring slots for
+    # ~10 commits, and get evicted when fresh fast starts need the space
+    pop = ClientPopulation(cohorts=(
+        Cohort(name="slow", n=2, delay=DelayModel(base=8.0, scale=0.0)),
+        Cohort(name="fast", n=6, delay=DelayModel(base=0.3, scale=0.0)),
+    ))
+    sched = strag.make_schedule(0, 8, population=pop, t_server=0.1)
+    st = events.TimelineStream(sched, 16, quorum=1, discount=0.5, taus=1,
+                               k_max=3, capacity=3)
+    rows = st.take(16)
+    assert np.all(rows.started <= 3) and np.all(rows.applied <= 3)
+    assert rows.skipped.sum() > 0          # idle fast tier exceeds k_max
+    assert rows.evicted.sum() > 0          # slow tier outlives the ring
+    in_flight = (rows.started.sum() - rows.applied.sum()
+                 - rows.evicted.sum())
+    assert 0 <= in_flight <= 3
+    # pad conventions the device step relies on: dropped scatter slot,
+    # zero-weight clamped gather
+    assert np.all(rows.start_slot[rows.start_client < 0] == 3)
+    assert np.all(rows.apply_w[rows.apply_client < 0] == 0.0)
+    # ragged rows pad to the fixed (C, k_max) widths the device scans
+    assert rows.start_client.shape == (16, 3)
+    assert rows.apply_client.shape == (16, 3)
+
+
+def test_resolve_store_geometry_autos():
+    mk = lambda **kw: SFLConfig(n_clients=kw.pop("M"), **kw)
+    # quorum=0: both collapse to M — the dense one-slot-per-client layout
+    assert events.resolve_store_geometry(mk(M=7)) == (7, 7)
+    # small fleet: the 4x-quorum floor caps at M (no truncation => the
+    # bit-equivalence regime)
+    assert events.resolve_store_geometry(mk(M=4, quorum=2)) == (4, 4)
+    # fleet scale: k = 4*K (floor 16), ring = 8 commit batches
+    assert events.resolve_store_geometry(mk(M=10_000, quorum=64)) \
+        == (256, 2048)
+    assert events.resolve_store_geometry(mk(M=10_000, quorum=2)) == (16, 128)
+    # explicit overrides win but never exceed M, and cap >= k
+    assert events.resolve_store_geometry(
+        mk(M=100, quorum=8, k_max=10, ring_capacity=5)) == (10, 10)
+
+
+def test_sparse_store_leading_dim_is_ring_capacity():
+    sfl = SFLConfig(n_clients=100, tau=2, n_perturbations=2, quorum=4,
+                    timeline="sparse")
+    _, cap = events.resolve_store_geometry(sfl)
+    store = events.init_store(sfl)
+    assert cap == min(100, 8 * 16)                 # auto: 8 batches of 16
+    assert store["srv_keys"].shape[0] == cap
+    dense_store = events.init_store(dataclasses.replace(sfl,
+                                                        timeline="dense"))
+    assert dense_store["srv_keys"].shape[0] == 100
+
+
+def test_sparse_timeline_rejects_sync_modes(setup):
+    cfg, params, _, sched, batch_fn, key = setup
+    sfl = SFLConfig(n_clients=M, tau=2, cut_units=1, timeline="sparse")
+    with pytest.raises(ValueError, match="mode='async'"):
+        engine.run_rounds("mu_splitfed", cfg, sfl, params, batch_fn, sched,
+                          key, rounds=2, mode="scan")
+    bad = SFLConfig(n_clients=M, tau=2, cut_units=1, timeline="ring")
+    with pytest.raises(ValueError, match="'dense'|'sparse'"):
+        engine.run_rounds("mu_splitfed", cfg, bad, params, batch_fn, sched,
+                          key, rounds=2, mode="scan")
+
+
+def test_sparse_engine_matches_dense_async(setup):
+    """The tentpole gate: the streamed (C, K) gather/scatter execution
+    reproduces the dense async trajectory (<=1e-5; commit pacing exactly)
+    on a tiered fleet with a real quorum + discount."""
+    cfg, params, _, _, batch_fn, key = setup
+    pop = tiered_pop(base_slow=1.0)
+    sched = strag.make_schedule(0, ROUNDS, population=pop, t_server=0.1)
+    base = SFLConfig(n_clients=M, tau=2, cut_units=1, lr_server=5e-3,
+                     lr_client=1e-3, lr_global=1.0, population=pop,
+                     quorum=3, staleness_discount=0.5)
+    dense = engine.run_rounds("async_mu_splitfed", cfg, base, params,
+                              batch_fn, sched, key, rounds=ROUNDS,
+                              mode="async", chunk_size=2)
+    sp = engine.run_rounds("async_mu_splitfed", cfg,
+                           dataclasses.replace(base, timeline="sparse"),
+                           params, batch_fn, sched, key, rounds=ROUNDS,
+                           mode="async", chunk_size=2)
+    assert np.max(np.abs(dense.round_loss - sp.round_loss)) <= 1e-5
+    assert np.array_equal(dense.round_times, sp.round_times)
+    assert maxdiff(dense.params, sp.params) <= 1e-5
+
+
+def test_sparse_resume_bit_identical(setup):
+    """Checkpoint resume under timeline='sparse': the stream's skip()
+    prefix replay plus the restored ring store reproduce the
+    uninterrupted run bit for bit."""
+    cfg, params, _, _, batch_fn, key = setup
+    pop = tiered_pop(base_slow=1.0)
+    sched = strag.make_schedule(0, ROUNDS, population=pop, t_server=0.1)
+    sfl = SFLConfig(n_clients=M, tau=2, cut_units=1, lr_server=5e-3,
+                    lr_client=1e-3, lr_global=1.0, population=pop,
+                    quorum=3, staleness_discount=0.5, timeline="sparse")
+    full = engine.run_rounds("async_mu_splitfed", cfg, sfl, params, batch_fn,
+                             sched, key, rounds=ROUNDS, mode="async",
+                             chunk_size=2)
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        part1 = engine.run_rounds("async_mu_splitfed", cfg, sfl, params,
+                                  batch_fn, sched, key, rounds=4,
+                                  mode="async", chunk_size=2,
+                                  checkpointer=ck, ckpt_every=2)
+        ck.wait()
+        p2, s2, meta = engine.restore_run(ck, "async_mu_splitfed", cfg, sfl,
+                                          params, batch_fn)
+        assert meta["step"] == 3
+        assert maxdiff(s2, part1.state) == 0.0     # ring store round-trips
+        part2 = engine.run_rounds("async_mu_splitfed", cfg, sfl, p2,
+                                  batch_fn, sched, key, rounds=ROUNDS,
+                                  start_round=meta["step"] + 1, state=s2,
+                                  mode="async", chunk_size=2)
+    resumed = np.concatenate([part1.round_loss, part2.round_loss])
+    assert np.array_equal(full.round_loss, resumed)
+    assert maxdiff(full.params, part2.params) == 0.0
+    assert maxdiff(full.state, part2.state) == 0.0
+
+
+def test_sparse_adaptive_tau_matches_dense(setup):
+    """The controller re-plans τ mid-run over BOTH backends: the sparse
+    stream rebuilds from the re-planned version with the resized ring and
+    must land the same trajectory and τ decisions as the dense path."""
+    cfg, params, _, _, batch_fn, key = setup
+    pop = tiered_pop(base_slow=1.0)
+    sched = strag.make_schedule(0, ROUNDS, population=pop, t_server=0.1)
+    base = SFLConfig(n_clients=M, tau=1, cut_units=1, lr_server=5e-3,
+                     lr_client=1e-3, lr_global=1.0, population=pop,
+                     quorum=3, staleness_discount=0.5)
+    dn = engine.run_rounds("async_mu_splitfed", cfg, base, params, batch_fn,
+                           sched, key, rounds=ROUNDS, mode="async",
+                           chunk_size=2,
+                           controller=engine.AdaptiveTau(tau_max=8))
+    sp = engine.run_rounds("async_mu_splitfed", cfg,
+                           dataclasses.replace(base, timeline="sparse"),
+                           params, batch_fn, sched, key, rounds=ROUNDS,
+                           mode="async", chunk_size=2,
+                           controller=engine.AdaptiveTau(tau_max=8))
+    assert np.array_equal(dn.tau_per_round, sp.tau_per_round)
+    assert np.max(np.abs(dn.round_loss - sp.round_loss)) <= 1e-5
+    assert np.array_equal(dn.round_times, sp.round_times)

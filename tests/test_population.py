@@ -287,3 +287,74 @@ def test_controller_deadline_override(tiny_setup):
                       chunk_callback=lambda info, p, s: infos.append(info))
     consumed = np.concatenate([i.masks for i in infos])
     assert np.array_equal(consumed, np.tile([1, 1, 0, 0], (6, 1)))
+
+
+# ---------------------------------------------------------------------------
+# chunked schedule streaming + fleet vectors / sharding specs
+# ---------------------------------------------------------------------------
+
+def test_make_schedule_stream_matches_monolithic():
+    """Chunked generation consumes ONE shared sampler in round order, so
+    concatenating stream chunks is bit-identical to the one-shot
+    make_schedule at any chunking — what lets the engine feed the DES
+    without ever materializing the full (R, M) schedule."""
+    pop = parse_population("tiered:4x1.0@0.8,2x0.2~0.4/0.6%3",
+                           straggler_scale=1.5)
+    whole = strag.make_schedule(3, 20, population=pop, deadline=4.0,
+                                t_server=0.2, t_comm=0.1)
+    for chunk_rounds in (1, 7, 64):
+        chunks = list(strag.make_schedule_stream(
+            3, 20, population=pop, deadline=4.0, t_server=0.2, t_comm=0.1,
+            chunk_rounds=chunk_rounds))
+        for f in ("delays", "participation", "deadline", "masks",
+                  "fresh_median"):
+            got = np.concatenate([getattr(c, f) for c in chunks])
+            assert np.array_equal(getattr(whole, f), got), \
+                f"{f} @ chunk_rounds={chunk_rounds}"
+        for f in ("t_server", "t_comm", "t_comm_scale"):
+            assert np.array_equal(np.asarray(getattr(whole, f)),
+                                  np.asarray(getattr(chunks[0], f))), f
+
+
+def test_client_vectors_expand_cohorts():
+    pop = parse_population("tiered:3x1.0@0.8,2x0.2%4", straggler_scale=1.0)
+    vecs = pop.client_vectors()
+    assert set(vecs) >= {"cohort_id", "t_comm_scale", "delay_base",
+                         "delay_scale", "participation"}
+    assert all(v.shape == (5,) for v in vecs.values())
+    assert vecs["cohort_id"].tolist() == [0, 0, 0, 1, 1]
+    assert np.allclose(vecs["t_comm_scale"][3:], 4.0)
+    assert np.allclose(vecs["participation"][:3], 0.8)
+
+
+def test_population_and_store_pspecs_guard_divisibility():
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import SFLConfig as _SFL
+    from repro.core import events
+    from repro.sharding import specs
+
+    pop = ClientPopulation.single(16, straggler_scale=1.0)
+    ps = specs.population_pspecs(pop.client_vectors(),
+                                 axis_sizes={"data": 8})
+    assert all(p == P("data") for p in ps.values())     # 16 % 8 == 0
+    odd = specs.population_pspecs(
+        ClientPopulation.single(5).client_vectors(), axis_sizes={"data": 8})
+    assert all(p == P(None) for p in odd.values())      # replicate
+
+    store = events.init_store(_SFL(n_clients=16, tau=2, n_perturbations=2))
+    sp = specs.event_store_pspecs(store, axis_sizes={"data": 8})
+    for name, v in store.items():
+        assert sp[name] == P("data", *((None,) * (v.ndim - 1))), name
+
+
+def test_plan_event_store_places_ring_on_data_axis():
+    from repro.configs.base import MeshConfig
+    from repro.sharding import planner
+
+    mesh = MeshConfig(shape=(4, 2), axes=("data", "model"))
+    plan = planner.plan_event_store(2048, 10_000, mesh, tau=4, n_pert=2)
+    assert plan.slot_axis == "data"                     # 2048 % 4 == 0
+    assert plan.client_axis == "data"                   # 10000 % 4 == 0
+    assert plan.bytes_per_device == planner.store_bytes(2048, 4, 2) // 4
+    odd = planner.plan_event_store(2047, 9_999, mesh)
+    assert odd.slot_axis is None and odd.client_axis is None

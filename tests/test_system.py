@@ -21,3 +21,25 @@ def test_train_driver_checkpoint_restart():
                             text=True, timeout=560, cwd="/root/repo", env=env)
         assert "[resume] from round" in r2.stdout, r2.stdout + r2.stderr[-2000:]
         assert "round    4" in r2.stdout
+
+
+def test_train_driver_validates_async_policy_flags():
+    """Parse-time validation (no silent clamping inside the DES): quorum
+    must fit the RESOLVED fleet, the discount must be a weight base in
+    [0, 1], geometry overrides must be non-negative, and the sparse
+    timeline only exists under --async."""
+    from repro.launch import train
+    base = ["--arch", "olmo-1b", "--smoke", "--rounds", "1", "--clients",
+            "4", "--batch", "1", "--seq", "16"]
+    with pytest.raises(SystemExit):        # quorum > n_clients
+        train.main(base + ["--async", "--quorum", "9"])
+    with pytest.raises(SystemExit):        # quorum > resolved population M
+        train.main(base + ["--async", "--quorum", "5",
+                           "--population", "tiered:2x1.0,2x0.5"])
+    with pytest.raises(SystemExit):        # discount outside [0, 1]
+        train.main(base + ["--async", "--quorum", "2",
+                           "--staleness-discount", "1.5"])
+    with pytest.raises(SystemExit):        # negative geometry override
+        train.main(base + ["--async", "--quorum", "2", "--k-max", "-1"])
+    with pytest.raises(SystemExit):        # sparse without --async
+        train.main(base + ["--timeline", "sparse"])

@@ -1,0 +1,122 @@
+"""Hypothesis property tests on the event-timeline invariants
+(core/events.py): conservation of contributions, commit-time monotonicity,
+weight normalization, and sparse == dense on random small fleets."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property tests skipped")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import events
+from repro.core import straggler as strag
+
+SET = dict(max_examples=20, deadline=None)
+
+# discounts whose staleness powers are dyadic: per-commit normalization is
+# then a division of exactly representable sums, so dense (M zero-padded
+# records) and sparse (K records) group-equivalently, bit for bit
+DYADIC = st.sampled_from([1.0, 0.5, 0.25])
+
+FLEET = st.fixed_dictionaries(dict(
+    seed=st.integers(0, 2**31 - 1),
+    M=st.integers(2, 12),
+    V=st.integers(0, 20),
+    quorum=st.integers(0, 12),
+    discount=DYADIC,
+    scale=st.floats(0.0, 3.0, allow_nan=False),
+    part=st.floats(0.3, 1.0, allow_nan=False),
+    t_server=st.floats(0.01, 1.0, allow_nan=False),
+))
+
+
+def _sched(p):
+    return strag.make_schedule(p["seed"], 4, p["M"],
+                               straggler_scale=p["scale"],
+                               participation=p["part"],
+                               t_server=p["t_server"], t_comm=0.05)
+
+
+def _dense(p):
+    return events.compile_timeline(_sched(p), p["V"],
+                                   quorum=min(p["quorum"], p["M"]),
+                                   discount=p["discount"], tau=2)
+
+
+@settings(**SET)
+@given(p=FLEET)
+def test_every_start_commits_once_or_is_in_flight(p):
+    """Conservation: each (version, client) start produces exactly one
+    event — committed at exactly one commit_idx, or in flight (-1) at the
+    horizon. Nothing is double-applied, nothing vanishes."""
+    tl = _dense(p)
+    starts = sorted(map(tuple, np.argwhere(tl.start_mask > 0)))
+    evs = sorted(zip(tl.round_of_origin.tolist(), tl.client_id.tolist()))
+    assert evs == starts
+    committed = tl.commit_idx[tl.commit_idx >= 0]
+    assert np.all(committed < max(p["V"], 1))
+
+
+@settings(**SET)
+@given(p=FLEET)
+def test_commit_times_non_decreasing(p):
+    tl = _dense(p)
+    assert np.all(np.diff(tl.commit_times) >= 0)
+    assert np.all(tl.durations >= 0)
+    assert np.all(tl.quorum_wait >= 0)
+
+
+@settings(**SET)
+@given(p=FLEET)
+def test_commit_weights_sum_to_one_or_zero(p):
+    """Each commit's staleness-discounted weights are normalized: they sum
+    to 1 when anything applied, exactly 0 when nothing did."""
+    tl = _dense(p)
+    sums = tl.apply_w.sum(axis=1)
+    applied = tl.applied > 0
+    assert np.allclose(sums[applied], 1.0, atol=1e-6)
+    assert np.all(sums[~applied] == 0.0)
+
+
+@settings(**SET)
+@given(p=FLEET)
+def test_sparse_equals_dense_on_random_fleets(p):
+    """The heap DES at exact geometry reproduces the dense compiler
+    field-for-field on arbitrary small fleets."""
+    q = min(p["quorum"], p["M"])
+    dense = events.compile_timeline(_sched(p), p["V"], quorum=q,
+                                    discount=p["discount"], tau=2)
+    got = events.compile_sparse_timeline(_sched(p), p["V"], quorum=q,
+                                         discount=p["discount"],
+                                         tau=2).densify()
+    for f in ("arrival_time", "client_id", "round_of_origin", "staleness",
+              "commit_idx", "start_mask", "apply_w", "staleness_m",
+              "commit_times", "durations", "quorum_wait", "applied",
+              "tau_per_version"):
+        assert np.array_equal(getattr(dense, f), getattr(got, f)), f
+
+
+@settings(**SET)
+@given(p=FLEET, k_max=st.integers(1, 6), cap_mult=st.integers(1, 4))
+def test_bounded_ring_conserves_contributions(p, k_max, cap_mult):
+    """Under forced truncation/eviction, the per-version counters still
+    balance: starts and applies respect the k_max batch width, and every
+    start is eventually applied, evicted, or in flight (the residual is
+    bounded by the ring capacity)."""
+    capacity = min(k_max * cap_mult, p["M"])
+    stream = events.TimelineStream(_sched(p), p["V"],
+                                   quorum=min(p["quorum"], p["M"]),
+                                   discount=p["discount"], taus=2,
+                                   k_max=k_max, capacity=capacity)
+    rows = stream.take(p["V"])
+    assert np.all(rows.started <= k_max)
+    assert np.all(rows.applied <= k_max)
+    in_flight = (rows.started.sum() - rows.applied.sum()
+                 - rows.evicted.sum())
+    assert 0 <= in_flight <= capacity
+    assert np.all(rows.skipped >= 0)
+    # padded row slots are inert by construction: zero weight, and the pad
+    # slot index is the one the device scatter drops / gather clamps
+    w = rows.apply_w
+    assert np.all(w[rows.apply_client < 0] == 0.0)
+    assert np.all(rows.start_slot[rows.start_client < 0] == capacity)
