@@ -1,27 +1,38 @@
 """Host timeline-compiler benchmark: dense (V, M) rows vs the sparse
-streaming DES (core/events.py), at fleet sizes M ∈ {1e3, 1e4, 1e5}.
+streaming DES (core/events.py), at fleet sizes M ∈ {1e3, 1e4, 1e5} plus a
+compiler-only FLEET arm at M=1e6 (DES + lazy schedule stream, no device
+scan).
 
 Measures, per backend and fleet size:
   * compile throughput (versions/s) — the dense compiler pays an O(M)
     Python start loop plus a full re-sort of the pending set per version;
-    the sparse DES pays a vectorized candidate scan plus O((K+E) log M)
-    heap work.
+    the sparse DES pays O(K log M + E_v) per version: cohort-indexed idle
+    sets for admission and one lexsort over the <= capacity pending slots
+    for the quorum.
   * peak host memory (tracemalloc, which tracks numpy data since 1.22) —
     dense materializes (V, M) start/apply/staleness rows plus the O(E)
     event list; sparse streams (chunk, k_max) rows and keeps O(M) scan
     state, so the trace never materializes.
 
-The acceptance gate for perf rung v7 is >= 10x peak-memory reduction at
-M=1e5, K=64.
+The dense compiler is REFUSED at M >= 1e5 with an O(V·M) size estimate
+(SystemExit) — perf rung v7 measured it once at 152 s / 824 MB for V=48,
+M=1e5 and that is the last time anyone should pay it. The perf rung v8
+acceptance gate is the FLEET arm: >= 10x versions/s over the v7 sparse
+DES extrapolated to M=1e6, with bounded memory (no (R, M) or (V, M)
+materialization anywhere on the path — the lazy schedule protocol never
+densifies a mask row).
 
     PYTHONPATH=src python -m benchmarks.bench_timeline            # full
     PYTHONPATH=src python -m benchmarks.bench_timeline --smoke    # CI gate
 
---smoke is the sparse==dense equivalence gate: timeline fields exactly
-equal after densifying (grid over quorum x discount x fleet), and the
-engine's sparse loss trajectory within 1e-5 of the dense async path on a
-tiered fleet (they are bit-equal here: same records in the same flatten
-order, and dyadic discount weights normalize exactly).
+--smoke is the equivalence gate: timeline fields exactly equal after
+densifying (grid over quorum x discount x fleet — this pits the
+cohort-indexed idle sets against the dense compiler's per-client
+reference scan, including a fast M=1e4 Markov-fleet pass), the engine's
+sparse loss trajectory within 1e-5 of the dense async path on a tiered
+fleet (they are bit-equal here: same records in the same flatten order,
+and dyadic discount weights normalize exactly), and the loader's O(K)
+subset staging bit-equal to indexing the fleet-width gather.
 """
 from __future__ import annotations
 
@@ -45,6 +56,32 @@ DISCOUNT = 0.5
 VERSIONS = 48
 CHUNK = 8
 SIZES = (1_000, 10_000, 100_000)
+FLEET_M = 1_000_000
+DENSE_REFUSE_M = 100_000
+# perf rung v7's recorded sparse-DES wall times (perf_iterations.json:
+# variant v7, same constants as above) — the v8 fleet-arm gate
+# extrapolates these linearly in M to the fleet size
+V7_SPARSE_SEC = {10_000: 0.2521, 100_000: 0.3014}
+
+
+def v7_extrapolated_sec(M: int) -> float:
+    """v7 sparse-DES seconds for VERSIONS versions, linear in M."""
+    (m0, s0), (m1, s1) = sorted(V7_SPARSE_SEC.items())
+    return s0 + (s1 - s0) / (m1 - m0) * (M - m0)
+
+
+def refuse_dense(M: int, versions: int) -> None:
+    """The dense compiler materializes (V, M) start/apply/staleness rows
+    plus an (R, M) f64 schedule; past DENSE_REFUSE_M that is a host-memory
+    incident, not a benchmark arm."""
+    if M >= DENSE_REFUSE_M:
+        est = versions * M * (4 + 4 + 8) + 8 * 8 * M
+        raise SystemExit(
+            f"dense timeline compiler refused at M={M:,} (>= "
+            f"{DENSE_REFUSE_M:,}): the (V={versions}, M={M:,}) "
+            f"start/apply/staleness rows plus the (R, M) schedule would "
+            f"materialize ~{est / 2**30:.2f} GiB host-side — run the "
+            f"sparse stream (the fleet arm) instead")
 
 
 def tiered(M: int) -> ClientPopulation:
@@ -79,6 +116,7 @@ def bench_one(M: int, versions: int = VERSIONS, seed: int = 0) -> dict:
     k_max, capacity = events.resolve_store_geometry(sfl)
 
     def dense():
+        refuse_dense(M, versions)
         tl = events.compile_timeline(sched, versions, quorum=QUORUM,
                                      discount=DISCOUNT, tau=2)
         return int(tl.applied.sum())
@@ -92,21 +130,63 @@ def bench_one(M: int, versions: int = VERSIONS, seed: int = 0) -> dict:
             applied += int(st.take(CHUNK).applied.sum())   # they're read
         return applied
 
-    d_applied, d_sec, d_peak = _traced(dense)
     s_applied, s_sec, s_peak = _traced(sparse)
     row = {
         "clients": M, "versions": versions, "k_max": k_max,
         "ring_capacity": capacity,
-        "dense": {"sec": round(d_sec, 4), "peak_mb": round(d_peak / 2**20, 3),
-                  "versions_per_s": round(versions / d_sec, 2),
-                  "applied": d_applied},
         "sparse": {"sec": round(s_sec, 4), "peak_mb": round(s_peak / 2**20, 3),
                    "versions_per_s": round(versions / s_sec, 2),
                    "applied": s_applied},
-        "mem_reduction": round(d_peak / max(s_peak, 1), 2),
-        "speedup": round(d_sec / max(s_sec, 1e-9), 2),
     }
+    try:
+        d_applied, d_sec, d_peak = _traced(dense)
+    except SystemExit as e:                    # M >= DENSE_REFUSE_M
+        tracemalloc.stop()
+        row["dense"] = {"refused": str(e)}
+        return row
+    row["dense"] = {"sec": round(d_sec, 4),
+                    "peak_mb": round(d_peak / 2**20, 3),
+                    "versions_per_s": round(versions / d_sec, 2),
+                    "applied": d_applied}
+    row["mem_reduction"] = round(d_peak / max(s_peak, 1), 2)
+    row["speedup"] = round(d_sec / max(s_sec, 1e-9), 2)
     return row
+
+
+def bench_fleet(M: int = FLEET_M, versions: int = VERSIONS,
+                seed: int = 0) -> dict:
+    """The compiler-only fleet arm: lazy schedule stream + sparse DES at
+    M=1e6, nothing dense anywhere — the schedule is a SparseSchedule
+    (per-cohort AvailRows, keyed on-demand delays), so peak memory is the
+    O(M) scan state (busy flags, comm vector, idle index), not O(R·M) or
+    O(V·M). Timing includes the schedule build: it is O(#cohorts)."""
+    sfl = SFLConfig(n_clients=M, quorum=QUORUM,
+                    staleness_discount=DISCOUNT, timeline="sparse")
+    k_max, capacity = events.resolve_store_geometry(sfl)
+
+    def fleet():
+        sched = next(strag.make_schedule_stream(
+            seed, 8, population=tiered(M), t_server=T_SERVER,
+            t_comm=0.05, lazy=True))
+        st = events.TimelineStream(sched, versions, quorum=QUORUM,
+                                   discount=DISCOUNT, taus=2, k_max=k_max,
+                                   capacity=capacity)
+        applied = 0
+        while st.v < versions:
+            applied += int(st.take(CHUNK).applied.sum())
+        return applied
+
+    applied, sec, peak = _traced(fleet)
+    base_sec = v7_extrapolated_sec(M)
+    return {
+        "clients": M, "versions": versions, "k_max": k_max,
+        "ring_capacity": capacity, "sec": round(sec, 4),
+        "peak_mb": round(peak / 2**20, 3),
+        "versions_per_s": round(versions / sec, 2), "applied": applied,
+        "v7_extrapolated_sec": round(base_sec, 4),
+        "v7_extrapolated_versions_per_s": round(versions / base_sec, 2),
+        "speedup_vs_v7": round(base_sec / sec, 2),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -175,6 +255,64 @@ def smoke(seed: int = 0) -> None:
     print(f"smoke: engine sparse == dense async trajectory "
           f"(max diff {diff:.1e} <= 1e-5) over {kw['rounds']} versions")
 
+    # 3) cohort-index at scale: a fast M=1e4 Markov-fleet pass of the same
+    #    exactness gate — the cohort-bucketed idle sets against the dense
+    #    compiler's per-client reference scan, at a size where an O(M)
+    #    candidate scan per version would already hurt
+    M_big = 10_000
+    n_slow = M_big // 5
+    pop = ClientPopulation(cohorts=(
+        Cohort(name="fast", n=M_big - n_slow,
+               delay=DelayModel(base=0.3, scale=0.3),
+               availability="markov", p_dropout=0.1, p_recover=0.3),
+        Cohort(name="slow", n=n_slow, delay=DelayModel(base=4.0, scale=0.5),
+               availability="markov-shared", p_dropout=0.12,
+               p_recover=0.25),
+    ))
+    sched = strag.make_schedule(seed, 8, population=pop,
+                                t_server=T_SERVER, t_comm=0.05)
+    V = 12
+    dense_tl = events.compile_timeline(sched, V, quorum=QUORUM,
+                                       discount=DISCOUNT, tau=2)
+    got = events.compile_sparse_timeline(sched, V, quorum=QUORUM,
+                                         discount=DISCOUNT, tau=2).densify()
+    for f in _FIELDS:
+        assert np.array_equal(getattr(dense_tl, f), getattr(got, f)), \
+            f"cohort-index != dense reference on {f} at M={M_big}"
+    print(f"smoke: cohort-indexed DES == dense per-client reference at "
+          f"M={M_big} (Markov + shared-chain fleet, {V} versions, all "
+          f"fields exact)")
+
+    # 4) O(K) subset staging == indexing the fleet-width gather, bit-exact
+    #    (the engine's --loader subset path)
+    from repro.data import (FederatedLoader, SyntheticLM,
+                            dirichlet_partition)
+    n_cl = 24
+    ds = SyntheticLM(vocab_size=128, seq_len=16, seed=seed)
+    parts = dirichlet_partition(np.arange(512) % 10, n_cl, alpha=0.5,
+                                seed=seed)
+    loader = FederatedLoader(ds, parts, batch_per_client=2, seed=seed)
+    rng = np.random.default_rng(seed)
+    for r in (0, 3):
+        full = {k: np.asarray(v) for k, v in loader.round_batch(r).items()}
+        ids = np.sort(rng.choice(n_cl, size=7, replace=False))
+        sub = loader.subset_batch(r, ids)
+        for k in full:
+            assert np.array_equal(full[k][ids], sub[k]), \
+                f"subset_batch != fleet gather on {k} (round {r})"
+    print(f"smoke: loader subset staging == fleet-width gather "
+          f"(bit-exact, {n_cl} clients, K=7 subsets)")
+
+    # 5) the dense-compiler refusal actually fires with a size estimate
+    try:
+        refuse_dense(DENSE_REFUSE_M, VERSIONS)
+    except SystemExit as e:
+        assert "GiB" in str(e), "refusal message lost its size estimate"
+    else:
+        raise AssertionError("dense compiler accepted M >= DENSE_REFUSE_M")
+    print("smoke: dense compiler refuses M >= "
+          f"{DENSE_REFUSE_M:,} with a size estimate")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -196,34 +334,51 @@ def main(argv=None):
           f"{'peak_mb':>9s} {'mem_red':>8s} {'speedup':>8s}")
     for M in args.sizes:
         row = bench_one(M, versions=args.versions, seed=args.seed)
-        # bounded geometry (k_max << M) admits fewer starts than dense —
-        # exact equality is the --smoke gate; here just sanity-bound it
-        assert 0 < row["sparse"]["applied"] <= row["dense"]["applied"], \
-            "sparse DES applied an impossible contribution count"
-        for b in ("dense", "sparse"):
-            print(f"{M:8d} {b:>8s} {row[b]['sec']:8.3f} "
-                  f"{row[b]['versions_per_s']:9.1f} "
-                  f"{row[b]['peak_mb']:9.3f}"
-                  + (f" {row['mem_reduction']:8.1f} {row['speedup']:8.1f}"
-                     if b == "sparse" else ""))
+        if "refused" in row["dense"]:
+            print(f"{M:8d} {'dense':>8s}  -- refused: (V, M) rows past "
+                  f"M={DENSE_REFUSE_M:,} --")
+        else:
+            # bounded geometry (k_max << M) admits fewer starts than
+            # dense — exact equality is the --smoke gate; sanity-bound it
+            assert 0 < row["sparse"]["applied"] <= row["dense"]["applied"], \
+                "sparse DES applied an impossible contribution count"
+            print(f"{M:8d} {'dense':>8s} {row['dense']['sec']:8.3f} "
+                  f"{row['dense']['versions_per_s']:9.1f} "
+                  f"{row['dense']['peak_mb']:9.3f}")
+        print(f"{M:8d} {'sparse':>8s} {row['sparse']['sec']:8.3f} "
+              f"{row['sparse']['versions_per_s']:9.1f} "
+              f"{row['sparse']['peak_mb']:9.3f}"
+              + (f" {row['mem_reduction']:8.1f} {row['speedup']:8.1f}"
+                 if "mem_reduction" in row else ""))
         results.append(row)
 
-    big = results[-1]
-    json.dump(results, open(args.out, "w"), indent=1)
+    fleet = bench_fleet(FLEET_M, versions=args.versions, seed=args.seed)
+    print(f"\nfleet arm  M={fleet['clients']:,}  {fleet['sec']:.3f}s  "
+          f"{fleet['versions_per_s']:.1f} v/s  peak "
+          f"{fleet['peak_mb']:.1f} MB  ({fleet['speedup_vs_v7']:.1f}x the "
+          f"v7 DES extrapolated to this M)")
+    assert fleet["applied"] > 0, "fleet DES applied nothing"
+    assert fleet["speedup_vs_v7"] >= 10.0, \
+        (f"v8 gate: fleet arm {fleet['versions_per_s']} v/s is "
+         f"{fleet['speedup_vs_v7']}x the v7 extrapolation "
+         f"({fleet['v7_extrapolated_versions_per_s']} v/s) — need >= 10x")
+
+    json.dump(results + [{"fleet": fleet}], open(args.out, "w"), indent=1)
     perf = {
-        "variant": "v7", "bench": "bench_timeline",
+        "variant": "v8", "bench": "bench_timeline",
         "quorum": QUORUM, "staleness_discount": DISCOUNT,
         "versions": args.versions, "t_server": T_SERVER,
         "rows": results,
-        "mem_reduction_at_max_M": big["mem_reduction"],
-        "compile_speedup_at_max_M": big["speedup"],
+        "fleet": fleet,
+        "fleet_speedup_vs_v7_extrapolated": fleet["speedup_vs_v7"],
     }
     rows = (json.load(open(args.perf_out))
             if os.path.exists(args.perf_out) else [])
     rows.append(perf)
     json.dump(rows, open(args.perf_out, "w"), indent=1)
-    print(f"\nappended v7 row to {args.perf_out} "
-          f"(mem reduction {big['mem_reduction']}x at M={big['clients']})")
+    print(f"appended v8 row to {args.perf_out} "
+          f"({fleet['speedup_vs_v7']}x v7-extrapolated at "
+          f"M={fleet['clients']:,})")
     return results
 
 

@@ -575,20 +575,33 @@ def _stack_chunk(batch_fn, r0: int, n: int):
     return jax.tree.map(_stack_leaves, *[batch_fn(r0 + i) for i in range(n)])
 
 
-def _stack_sparse_chunk(batch_fn, r0: int, start_clients: np.ndarray):
+def _stack_sparse_chunk(batch_fn, r0: int, start_clients: np.ndarray,
+                        subset_fn=None, batch_put=None):
     """Stack a sparse chunk's batch rows -> leaves (C, K, ...): per
     version, gather ONLY the starting clients' rows from that round's
     batch (pad rows re-read client 0 — their records land in the ring's
     dropped pad slot, so they are never applied). The device never sees an
-    (M, ...) batch, which is what keeps upload volume O(K) per version."""
+    (M, ...) batch, which is what keeps upload volume O(K) per version.
+
+    ``subset_fn(round, client_ids)`` (e.g. FederatedLoader.subset_batch)
+    upgrades the gather to O(K) *staging*: only the K starting rows are
+    ever materialized on the host — the fleet-width batch is never built.
+    Pad rows (-1) clip to client 0, exactly the gather path's convention,
+    so both paths are bit-identical. ``batch_put`` (e.g. a NamedSharding
+    device_put from launch/fleet.py) places the stacked (C, K, ...) leaves
+    before the scan consumes them."""
     rounds = []
     for j in range(start_clients.shape[0]):
         idx = np.clip(start_clients[j], 0, None)
-        b = batch_fn(r0 + j)
-        rounds.append(jax.tree.map(
-            lambda x: x[idx] if isinstance(x, np.ndarray)
-            else jnp.take(jnp.asarray(x), jnp.asarray(idx), axis=0), b))
-    return jax.tree.map(_stack_leaves, *rounds)
+        if subset_fn is not None:
+            rounds.append(subset_fn(r0 + j, idx))
+        else:
+            b = batch_fn(r0 + j)
+            rounds.append(jax.tree.map(
+                lambda x: x[idx] if isinstance(x, np.ndarray)
+                else jnp.take(jnp.asarray(x), jnp.asarray(idx), axis=0), b))
+    out = jax.tree.map(_stack_leaves, *rounds)
+    return out if batch_put is None else batch_put(out)
 
 
 def _copy_tree(tree):
@@ -690,6 +703,8 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                chunk_callback: Optional[Callable] = None,
                controller: Optional[Controller] = None,
                tau_history: Optional[List[int]] = None,
+               batch_subset_fn: Optional[Callable] = None,
+               batch_put: Optional[Callable] = None,
                **algo_opts) -> EngineResult:
     """Run rounds [start_round, rounds) of ``algorithm``.
 
@@ -757,6 +772,15 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
     if sparse and not hasattr(algo, "async_sparse_round_fn"):
         raise ValueError(f"timeline='sparse' needs an algorithm with "
                          f"async_sparse_round_fn; {algo.name!r} has none")
+    if batch_subset_fn is not None and not sparse:
+        raise ValueError(
+            "batch_subset_fn is the sparse timeline's O(K) staging hook; "
+            "the dense modes consume fleet-width batches — set "
+            "sfl.timeline='sparse' (with mode='async') to use it")
+    if batch_put is not None and not sparse:
+        raise ValueError(
+            "batch_put places sparse (C, K, ...) staged chunks; it has no "
+            "effect outside timeline='sparse'")
     n_run = rounds - start_round
     if n_run <= 0:
         empty = np.zeros((0,), np.float64)
@@ -764,8 +788,13 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                             np.zeros((0,), np.int64))
 
     if state is None:
+        # the subset path never materializes a fleet-width batch, not even
+        # for the state template: sparse-capable algorithms size their
+        # state from sfl (the ring store), so a 1-row probe batch suffices
+        batch0 = (batch_subset_fn(start_round, np.zeros(1, np.int64))
+                  if batch_subset_fn is not None else batch_fn(start_round))
         state = algo.init_state(cfg, sfl, params,
-                                jax.tree.map(jnp.asarray, batch_fn(start_round)))
+                                jax.tree.map(jnp.asarray, batch0))
 
     R = schedule.n_rounds
     rows = list(range(start_round, rounds))
@@ -1023,7 +1052,9 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                 qwaits[i:i + C] = rows_c.quorum_wait
                 params, state, mets = chunk_jit(
                     params, state,
-                    _stack_sparse_chunk(batch_fn, r0, rows_c.start_client),
+                    _stack_sparse_chunk(batch_fn, r0, rows_c.start_client,
+                                        subset_fn=batch_subset_fn,
+                                        batch_put=batch_put),
                     jnp.asarray(rows_c.start_client),
                     jnp.asarray(rows_c.start_slot),
                     jnp.asarray(rows_c.apply_slot),

@@ -60,9 +60,9 @@ Two timeline backends share these semantics (SFLConfig.timeline):
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
-from collections import OrderedDict
 from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
                     Sequence, Tuple)
 
@@ -72,6 +72,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, SFLConfig
 from repro.core import zo
+from repro.core.population import AvailRow
 from repro.core.splitfed import _client_round
 from repro.models import merge_params, split_params
 
@@ -318,6 +319,132 @@ def resolve_store_geometry(sfl: SFLConfig) -> Tuple[int, int]:
     return k, min(max(cap, k), M)
 
 
+class _CohortIdleIndex:
+    """Per-cohort idle-client index: a virgin-range pointer plus a
+    recycled-id min-heap per cohort, with exact per-cohort idle counters.
+
+    Replaces the DES's O(M) ``flatnonzero((mask > 0) & ~busy)`` candidate
+    scan: selection walks cohorts in client-id order, admitting up to
+    k_max idle available clients by taking the min of the cohort's
+    never-yet-consumed ascending range [virgin, hi) and its heap of
+    recycled (previously finished) ids — O(K·log W + A_v) per version,
+    where W is the in-flight window and A_v the size of the version's
+    sparse availability records. Init is O(#cohorts), never O(M): the
+    virgin range is two integers, and the heap only ever holds ids the
+    pointer has already passed (``finish`` guards the push), so the
+    min-of-union pop order is globally ascending. Heap entries are lazily
+    invalidated (the busy vector is the truth); duplicates pop
+    consecutively and are dropped; a busy id under the pointer is skipped
+    (its eventual ``finish`` re-adds it). Bit-exact with the dense scan:
+    cohorts are contiguous ascending id ranges, so admission order is
+    ascending client id, and the idle counters make the skipped-candidate
+    count exact without enumeration.
+    """
+
+    def __init__(self, bounds: Sequence[Tuple[int, int]]):
+        self.bounds = [(int(lo), int(hi)) for lo, hi in bounds]
+        self.virgin = [lo for lo, _ in self.bounds]
+        self.heaps: List[List[int]] = [[] for _ in self.bounds]
+        self.n_idle = [hi - lo for lo, hi in self.bounds]
+        self._his = [hi for _, hi in self.bounds]
+
+    def cohort_of(self, m: int) -> int:
+        return bisect.bisect_right(self._his, m)
+
+    def start(self, m: int) -> None:
+        """Client m went busy (any heap entry for it goes stale)."""
+        self.n_idle[self.cohort_of(m)] -= 1
+
+    def start_batch(self, admitted: List[int]) -> None:
+        """Admitted ids (ascending) went busy — one counter update per
+        cohort instead of one per client."""
+        n_idle, lo_i, n = self.n_idle, 0, len(admitted)
+        for c, hi in enumerate(self._his):
+            if lo_i >= n:
+                break
+            hi_i = bisect.bisect_left(admitted, hi, lo_i)
+            if hi_i != lo_i:
+                n_idle[c] -= hi_i - lo_i
+                lo_i = hi_i
+
+    def finish(self, m: int) -> None:
+        """Client m went idle (commit or eviction)."""
+        c = self.cohort_of(m)
+        if m < self.virgin[c]:          # else still covered by the range
+            heapq.heappush(self.heaps[c], m)
+        self.n_idle[c] += 1
+
+    def finish_batch(self, ms: Sequence[int]) -> None:
+        """Clients went idle (commit or eviction), arbitrary order."""
+        his, virgin = self._his, self.virgin
+        heaps, n_idle = self.heaps, self.n_idle
+        push, br = heapq.heappush, bisect.bisect_right
+        for m in ms:
+            c = br(his, m)
+            n_idle[c] += 1
+            if m < virgin[c]:           # else still covered by the range
+                push(heaps[c], m)
+
+    def select(self, avail: AvailRow, busy: np.ndarray,
+               k_max: int) -> Tuple[List[int], int]:
+        """(admitted ids, total candidate count) for one broadcast.
+
+        Admitted = the first k_max idle available clients in ascending id
+        order — exactly ``flatnonzero((mask > 0) & ~busy)[:k_max]``. The
+        total count covers ALL cohorts (the skipped statistic), via the
+        idle counters / sparse rows, never a fleet scan.
+        """
+        admitted: List[int] = []
+        total = 0
+        for c, kind in enumerate(avail.kinds):
+            if kind == "none":
+                continue
+            need = k_max - len(admitted)
+            if kind == "ids":
+                ids = avail.ids[c]
+                idle = ids[~busy[ids]]
+                total += int(idle.size)
+                if need > 0:
+                    admitted.extend(idle[:need].tolist())
+                continue                # index untouched (lazy staleness)
+            if kind == "not_ids":
+                down = avail.ids[c]
+                down_idle = int((~busy[down]).sum()) if down.size else 0
+                total += self.n_idle[c] - down_idle
+            else:                       # 'all'
+                total += self.n_idle[c]
+            heap = self.heaps[c]
+            down = avail.down_set(c) if kind == "not_ids" else ()
+            hi = self.bounds[c][1]
+            nxt = self.virgin[c]
+            deferred: List[int] = []    # idle but unavailable: keep them
+            last = -1
+            while need > 0:
+                if heap and (nxt >= hi or heap[0] < nxt):
+                    m = heapq.heappop(heap)
+                    if m == last:       # duplicate copy of the same entry
+                        continue
+                    last = m
+                    if busy[m]:         # stale entry (lazy deletion)
+                        continue
+                elif nxt < hi:
+                    m = nxt
+                    nxt += 1
+                    if busy[m]:         # started via an 'ids' row; its
+                        continue        # finish() re-adds it to the heap
+                else:
+                    break
+                if m in down:
+                    deferred.append(m)
+                    continue
+                admitted.append(m)
+                need -= 1
+            self.virgin[c] = nxt
+            for m in deferred:
+                heapq.heappush(heap, m)
+        return admitted, total
+
+
 class _VStep(NamedTuple):
     """One simulated version, ragged (host-side only)."""
     start_clients: List[int]
@@ -334,21 +461,31 @@ class _VStep(NamedTuple):
 
 
 class _EventSim:
-    """The heap-based discrete-event core of the sparse timeline.
+    """The discrete-event core of the sparse timeline.
 
-    State: a min-heap of (arrival, client, token) with lazy deletion (a
-    token per contribution invalidates heap entries of evicted/committed
-    work), an insertion-ordered pending map (eviction order = start
-    order), a min-heap of free ring slots (lowest slot first, so
+    State is slot-indexed over the ring: (capacity,) arrays of arrival
+    time, occupying client (-1 = free slot), version of origin, and a
+    monotone start counter (eviction order = start order). Admissions
+    write a batch of slots per version (lowest free slots first, so
     capacity >= M degenerates to the dense one-slot-per-client layout and
-    never evicts), and the (M,) busy vector for the vectorized candidate
-    scan. Deterministic and prefix-stable in exactly the dense compiler's
-    sense: same (quorum, discount, taus, masks) prefix -> same rows.
+    never evicts); commit selection is one lexsort by (arrival, client)
+    over the <= capacity pending slots — no fleet-width pass anywhere.
+    Candidate selection is driven by a _CohortIdleIndex over the
+    population's cohort ranges (O(K·log W + A_v) per version), never an
+    O(M) scan. Deterministic and prefix-stable in exactly the dense
+    compiler's sense: same (quorum, discount, taus, masks) prefix ->
+    same rows.
+
+    ``step`` takes the availability row as either a dense (M,) mask (the
+    bit-exact reference adapter, O(M) to bucket) or an AvailRow (the
+    streaming mask protocol — sub-O(M)); delays as a dense (M,) row or a
+    ``delays_for(ids)`` callable evaluated only on the admitted clients.
     """
 
     def __init__(self, n_clients: int, comm: np.ndarray, t_server: float,
                  *, quorum: int, discount: float, k_max: int,
-                 capacity: int, collect_events: bool = False):
+                 capacity: int, collect_events: bool = False,
+                 cohort_bounds: Optional[Sequence[Tuple[int, int]]] = None):
         self.M = int(n_clients)
         self.comm = np.asarray(comm, np.float64)
         self.t_server = float(t_server)
@@ -358,105 +495,127 @@ class _EventSim:
         self.capacity = int(capacity)
         self.t = 0.0
         self.v = 0
-        self._token = 0
-        # client -> (arrival, origin, slot, token); insertion order = start
-        # order, which is the eviction order when the ring is full
-        self.pending: "OrderedDict[int, Tuple[float, int, int, int]]" = \
-            OrderedDict()
-        self.heap: List[Tuple[float, int, int]] = []
-        self.free = list(range(self.capacity))
-        heapq.heapify(self.free)
+        self._ord = 0
+        # the ring, slot-indexed: client -1 marks a free slot
+        self.slot_arr = np.zeros(self.capacity, np.float64)
+        self.slot_client = np.full(self.capacity, -1, np.int64)
+        self.slot_origin = np.zeros(self.capacity, np.int64)
+        self.slot_ord = np.zeros(self.capacity, np.int64)
         self.busy = np.zeros(self.M, bool)
+        self.idle = _CohortIdleIndex(cohort_bounds or [(0, self.M)])
+        self._finished: List[int] = []  # drops awaiting the per-step flush
         self.events: Optional[List[Tuple[float, int, int, int, int]]] = \
             [] if collect_events else None
 
-    def _drop(self, m: int) -> Tuple[float, int]:
-        """Remove client m's contribution; free its slot; return (arr, origin)."""
-        arr, origin, slot, _tok = self.pending.pop(m)
-        self.busy[m] = False
-        heapq.heappush(self.free, slot)
-        return arr, origin
-
-    def step(self, delay_row: np.ndarray, mask_row: np.ndarray,
-             tau: int) -> _VStep:
+    def step(self, delay_row, mask_row, tau: int) -> _VStep:
         t, v = self.t, self.v
         # broadcast: idle clients on the mask fetch and start, in client-id
         # order (the dense compiler's iteration order), admitted up to the
         # k_max batch width; the rest are skipped, not deferred — they may
         # start at a later broadcast whose mask includes them
-        cand = np.flatnonzero((np.asarray(mask_row) > 0) & ~self.busy)
-        admitted = cand[:self.k_max]
-        skipped = int(cand.size - admitted.size)
-        start_clients: List[int] = []
-        start_slots: List[int] = []
+        avail = (mask_row if isinstance(mask_row, AvailRow) else
+                 AvailRow.from_mask(mask_row, self.idle.bounds))
+        admitted, n_cand = self.idle.select(avail, self.busy, self.k_max)
+        skipped = n_cand - len(admitted)
+        adm = np.asarray(admitted, np.int64)
+        delays = (np.asarray(delay_row(adm), np.float64) if callable(delay_row)
+                  else np.asarray(delay_row)[adm])
+        arrs = t + delays + self.comm[adm]
+        self.busy[adm] = True           # evictions below re-clear theirs
+        self.idle.start_batch(admitted)
+        n_admit = len(admitted)
+        free_idx = np.flatnonzero(self.slot_client < 0)
         evicted = 0
-        for m in admitted.tolist():
-            if not self.free:
-                # ring full: evict the oldest-started in-flight
-                # contribution (it never applies — counted, never silent)
-                em = next(iter(self.pending))
-                earr, eorigin = self._drop(em)
-                if self.events is not None:
-                    self.events.append((earr, em, eorigin, -1, -1))
-                evicted += 1
-            slot = heapq.heappop(self.free)
-            arr = t + float(delay_row[m]) + self.comm[m]
-            self._token += 1
-            self.pending[m] = (arr, v, slot, self._token)
-            heapq.heappush(self.heap, (arr, m, self._token))
-            self.busy[m] = True
-            start_clients.append(m)
-            start_slots.append(slot)
-        # quorum: pop the k earliest VALID arrivals (lazy deletion skips
-        # tokens of evicted work) — the k-th pop is the quorum arrival
-        n_pend = len(self.pending)
+        if n_admit <= free_idx.size:
+            # common path: batch-assign the lowest free slots in admitted
+            # (= ascending client id) order — exactly the sequential
+            # pop-lowest-slot assignment when no eviction interleaves
+            slots = free_idx[:n_admit]
+            self.slot_arr[slots] = arrs
+            self.slot_client[slots] = adm
+            self.slot_origin[slots] = v
+            self.slot_ord[slots] = self._ord + np.arange(n_admit)
+            self._ord += n_admit
+        else:
+            # ring pressure: interleave evictions sequentially — each
+            # admitted client takes the lowest slot free at that moment,
+            # evicting the oldest-started in-flight contribution when none
+            # is (it never applies — counted, never silent)
+            free_heap = free_idx.tolist()   # ascending => a valid heap
+            slot_list: List[int] = []
+            for m, arr in zip(admitted, arrs.tolist()):
+                if not free_heap:
+                    valid = np.flatnonzero(self.slot_client >= 0)
+                    es = int(valid[np.argmin(self.slot_ord[valid])])
+                    em = int(self.slot_client[es])
+                    self.slot_client[es] = -1
+                    self.busy[em] = False
+                    self._finished.append(em)
+                    if self.events is not None:
+                        self.events.append((float(self.slot_arr[es]), em,
+                                            int(self.slot_origin[es]),
+                                            -1, -1))
+                    evicted += 1
+                    heapq.heappush(free_heap, es)
+                slot = heapq.heappop(free_heap)
+                self.slot_arr[slot] = arr
+                self.slot_client[slot] = m
+                self.slot_origin[slot] = v
+                self.slot_ord[slot] = self._ord
+                self._ord += 1
+                slot_list.append(slot)
+            slots = np.asarray(slot_list, np.int64)
+        # quorum: the k earliest pending arrivals, ties broken by client id
+        # (the arrival heap's pop order) — one lexsort over <= capacity
+        # slots; the k-th is the quorum arrival
+        valid_idx = np.flatnonzero(self.slot_client >= 0)
+        n_pend = valid_idx.size
         k = n_pend if self.quorum <= 0 else min(self.quorum, n_pend)
-        popped: List[Tuple[float, int]] = []
-        q_arrival = t
-        while self.heap and len(popped) < k:
-            arr, m, tok = heapq.heappop(self.heap)
-            cur = self.pending.get(m)
-            if cur is None or cur[3] != tok:
-                continue
-            popped.append((arr, m))
-            q_arrival = arr
-        quorum_wait = max(q_arrival - t, 0.0) if popped else 0.0
+        if n_pend:
+            va = self.slot_arr[valid_idx]
+            order = np.lexsort((self.slot_client[valid_idx], va))
+            sorted_slots = valid_idx[order]
+            sa = va[order]
+        q_arrival = float(sa[k - 1]) if k > 0 else t
+        quorum_wait = max(q_arrival - t, 0.0) if k > 0 else 0.0
         c_time = max(q_arrival, t + float(tau) * self.t_server)
         # opportunistic extras: everything else delivered by the commit,
-        # up to the k_max batch width
-        while self.heap and len(popped) < self.k_max \
-                and self.heap[0][0] <= c_time:
-            arr, m, tok = heapq.heappop(self.heap)
-            cur = self.pending.get(m)
-            if cur is None or cur[3] != tok:
-                continue
-            popped.append((arr, m))
-        # overflow past the batch width (possible when quorum > k_max)
-        # defers: pushed back delivered, it folds into a later commit at
-        # discount**(staleness then) — never silently dropped
-        for arr, m in popped[self.k_max:]:
-            heapq.heappush(self.heap, (arr, m, self.pending[m][3]))
-        popped = popped[:self.k_max]
+        # up to the k_max batch width; overflow past the width (possible
+        # when quorum > k_max) simply stays pending — it folds into a
+        # later commit at discount**(staleness then), never dropped
+        n_del = int(np.searchsorted(sa, c_time, side="right")) if n_pend \
+            else 0
+        n_take = min(n_del, self.k_max)
+        take = sorted_slots[:n_take] if n_take else \
+            np.zeros(0, np.int64)
         # apply in client-id order (dense: `for m in sorted(pending)`)
-        applied = []
-        for arr, m in popped:
-            _, origin, slot, _tok = self.pending[m]
-            self._drop(m)
-            applied.append((m, slot, v - origin, arr, origin))
-        applied.sort()
-        ws = [self.discount ** s for _, _, s, _, _ in applied]
-        tot = float(np.sum(np.asarray(ws))) if ws else 0.0
+        ord2 = np.argsort(self.slot_client[take])
+        take = take[ord2]
+        clients = self.slot_client[take]
+        stales = v - self.slot_origin[take]
+        ws_arr = np.power(self.discount, stales.astype(np.float64))
+        tot = float(np.sum(ws_arr)) if n_take else 0.0
         if tot > 0:
-            ws = [w / tot for w in ws]
-        if self.events is not None:
-            for (m, _slot, s, arr, origin), _w in zip(applied, ws):
-                self.events.append((arr, m, origin, s, v))
+            ws_arr = ws_arr / tot
+        if self.events is not None and n_take:
+            arrs_t = self.slot_arr[take]
+            origins = self.slot_origin[take]
+            for j in range(n_take):
+                self.events.append((float(arrs_t[j]), int(clients[j]),
+                                    int(origins[j]), int(stales[j]), v))
+        if n_take:
+            self.slot_client[take] = -1
+            self.busy[clients] = False
+            self._finished.extend(clients.tolist())
+        if self._finished:
+            self.idle.finish_batch(self._finished)
+            self._finished.clear()
         self.t, self.v = c_time, v + 1
         return _VStep(
-            start_clients=start_clients, start_slots=start_slots,
-            apply_clients=[a[0] for a in applied],
-            apply_slots=[a[1] for a in applied],
-            apply_stales=[a[2] for a in applied], apply_ws=ws,
+            start_clients=admitted, start_slots=slots.tolist(),
+            apply_clients=clients.tolist(),
+            apply_slots=take.tolist(),
+            apply_stales=stales.tolist(), apply_ws=ws_arr.tolist(),
             commit_time=c_time, duration=c_time - t,
             quorum_wait=quorum_wait, evicted=evicted, skipped=skipped)
 
@@ -464,9 +623,11 @@ class _EventSim:
         """Contributions still in flight at the horizon (delivered to
         nobody), appended to the collected event list."""
         assert self.events is not None
-        for m in sorted(self.pending):
-            arr, origin, _slot, _tok = self.pending[m]
-            self.events.append((arr, m, origin, -1, -1))
+        valid = np.flatnonzero(self.slot_client >= 0)
+        for s_i in valid[np.argsort(self.slot_client[valid])].tolist():
+            self.events.append((float(self.slot_arr[s_i]),
+                                int(self.slot_client[s_i]),
+                                int(self.slot_origin[s_i]), -1, -1))
         return self.events
 
 
@@ -526,11 +687,17 @@ def _pack_rows(steps: Sequence[_VStep], k_start: int, k_apply: int,
 
 
 def _comm_of(schedule) -> np.ndarray:
-    M = schedule.delays.shape[1]
-    comm = np.full(M, schedule.t_comm, np.float64)
+    comm = np.full(schedule.n_clients, schedule.t_comm, np.float64)
     if schedule.t_comm_scale is not None:
         comm = schedule.t_comm * np.asarray(schedule.t_comm_scale, np.float64)
     return comm
+
+
+def _cohort_bounds_of(schedule) -> List[Tuple[int, int]]:
+    pop = getattr(schedule, "population", None)
+    if pop is None:
+        return [(0, schedule.n_clients)]
+    return [(s.start, s.stop) for s in pop.slices()]
 
 
 class TimelineStream:
@@ -547,6 +714,12 @@ class TimelineStream:
     taus may be a live (n_versions,) array a controller mutates for
     versions not yet taken; mask_row_fn(v) -> (M,) overrides the cyclic
     schedule masks (the engine uses it for deadline re-plans).
+
+    ``schedule`` is a dense straggler.Schedule — or any lazy schedule
+    speaking the streaming mask protocol (straggler.make_sparse_schedule):
+    ``avail_row(r)`` AvailRows + ``delays_for(r, ids)`` keyed delays
+    instead of materialized (R, M) rows, which is what lets the DES run
+    million-client fleets without ever densifying the schedule.
     """
 
     def __init__(self, schedule, n_versions: int, *, quorum: int,
@@ -554,7 +727,8 @@ class TimelineStream:
                  mask_row_fn: Optional[Callable[[int], np.ndarray]] = None,
                  collect_events: bool = False):
         self.schedule = schedule
-        self.R, self.M = schedule.delays.shape
+        self.R, self.M = schedule.n_rounds, schedule.n_clients
+        self._lazy = not hasattr(schedule, "masks")
         self.n_versions = int(n_versions)
         self.taus = (np.full(self.n_versions, taus, np.int64)
                      if np.ndim(taus) == 0 else np.asarray(taus))
@@ -567,7 +741,8 @@ class TimelineStream:
         self.sim = _EventSim(
             self.M, _comm_of(schedule), schedule.t_server, quorum=quorum,
             discount=discount, k_max=k_max, capacity=capacity,
-            collect_events=collect_events)
+            collect_events=collect_events,
+            cohort_bounds=_cohort_bounds_of(schedule))
 
     @property
     def v(self) -> int:
@@ -577,10 +752,16 @@ class TimelineStream:
         v = self.sim.v
         if v >= self.n_versions:
             raise ValueError(f"stream exhausted at version {v}")
-        mask = (self.mask_row_fn(v) if self.mask_row_fn is not None
-                else self.schedule.masks[v % self.R])
-        return self.sim.step(self.schedule.delays[v % self.R], mask,
-                             int(self.taus[v]))
+        r = v % self.R
+        if self._lazy:
+            mask = (self.mask_row_fn(v) if self.mask_row_fn is not None
+                    else self.schedule.avail_row(r))
+            delays = lambda ids: self.schedule.delays_for(r, ids)
+        else:
+            mask = (self.mask_row_fn(v) if self.mask_row_fn is not None
+                    else self.schedule.masks[r])
+            delays = self.schedule.delays[r]
+        return self.sim.step(delays, mask, int(self.taus[v]))
 
     def skip(self, n: int) -> None:
         for _ in range(int(n)):
@@ -670,7 +851,8 @@ def compile_sparse_timeline(schedule, n_versions: int, *, quorum: int = 0,
     cap = M if capacity is None else int(capacity)
     sim = _EventSim(M, _comm_of(schedule), schedule.t_server, quorum=quorum,
                     discount=discount, k_max=k, capacity=cap,
-                    collect_events=True)
+                    collect_events=True,
+                    cohort_bounds=_cohort_bounds_of(schedule))
     steps = []
     for v in range(V):
         mask = mask_rows[v] if mask_rows is not None \

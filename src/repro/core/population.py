@@ -30,7 +30,75 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["DelayModel", "Cohort", "ClientPopulation", "parse_population"]
+__all__ = ["DelayModel", "Cohort", "ClientPopulation", "parse_population",
+           "AvailRow"]
+
+
+class AvailRow:
+    """One version's availability, bucketed by cohort — the streaming mask
+    protocol between schedule samplers and the sparse DES.
+
+    Instead of an (M,) dense 0/1 row, availability is one tagged record per
+    cohort (cohorts are contiguous client-id ranges):
+
+      ('all',)             every client in the cohort is available
+      ('none',)            tier down / nobody drawn
+      ('ids', ids)         exactly ``ids`` (sorted GLOBAL client ids)
+      ('not_ids', ids)     everyone EXCEPT ``ids`` (sorted down-set) — the
+                           natural shape of a mostly-up Markov chain
+
+    The DES's cohort idle index consumes this directly, so a version's
+    candidate selection costs O(K·log M) plus the size of the sparse
+    records — never an O(M) scan — and a million-client schedule is never
+    densified. ``from_mask`` adapts a dense row (the bit-exact reference
+    path); ``densify`` expands back for tests.
+    """
+
+    __slots__ = ("bounds", "kinds", "ids", "sets")
+
+    def __init__(self, bounds, kinds, ids):
+        self.bounds = bounds            # [(lo, hi)] per cohort
+        self.kinds = kinds              # ['all'|'none'|'ids'|'not_ids']
+        self.ids = ids                  # sorted global-id arrays or None
+        # O(1) membership for 'not_ids' admission checks, built lazily
+        self.sets = [None] * len(kinds)
+
+    def down_set(self, c: int):
+        if self.sets[c] is None:
+            self.sets[c] = frozenset(self.ids[c].tolist())
+        return self.sets[c]
+
+    @classmethod
+    def from_mask(cls, mask: np.ndarray, bounds) -> "AvailRow":
+        """Bucket a dense (M,) 0/1 row by cohort (O(M) — the adapter for
+        dense-schedule-driven paths, which already hold the row)."""
+        mask = np.asarray(mask)
+        kinds, ids = [], []
+        for lo, hi in bounds:
+            nz = np.flatnonzero(mask[lo:hi] > 0)
+            if nz.size == hi - lo:
+                kinds.append("all")
+                ids.append(None)
+            elif nz.size == 0:
+                kinds.append("none")
+                ids.append(None)
+            else:
+                kinds.append("ids")
+                ids.append(nz.astype(np.int64) + lo)
+        return cls(list(bounds), kinds, ids)
+
+    def densify(self, n_clients: int) -> np.ndarray:
+        row = np.zeros(n_clients, np.float32)
+        for c, (lo, hi) in enumerate(self.bounds):
+            k = self.kinds[c]
+            if k == "all":
+                row[lo:hi] = 1.0
+            elif k == "ids":
+                row[self.ids[c]] = 1.0
+            elif k == "not_ids":
+                row[lo:hi] = 1.0
+                row[self.ids[c]] = 0.0
+        return row
 
 
 @dataclasses.dataclass(frozen=True)

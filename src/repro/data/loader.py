@@ -1,39 +1,69 @@
 """Sharded host loader. Stateless indexing: batch contents are a pure
 function of (seed, round, client) so checkpoint restarts resume the exact
-data order with no loader state to save. Device placement uses
-NamedSharding when a mesh is given (each host materializes only what lands
-on its addressable devices in a real multi-host run; here single-host)."""
+data order with no loader state to save — which also makes subset staging
+exact: materializing only the K clients that start a sparse version draws
+the same rows those clients would get in a fleet-width gather. Device
+placement uses NamedSharding when a mesh is given (each host materializes
+only what lands on its addressable devices in a real multi-host run; here
+single-host)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 
-def make_client_batches(dataset, client_indices: List[np.ndarray],
-                        round_idx: int, batch_per_client: int,
-                        seed: int = 0) -> Dict[str, np.ndarray]:
-    """Stack per-client batches -> leaves with leading M dim.
+def client_pools(client_indices: List[np.ndarray]) -> List[np.ndarray]:
+    """Resolve per-client index pools once (the empty-pool fallback hoisted
+    out of the per-round path).
 
     A client whose index pool is empty (possible when a sparse Dirichlet
     partition is built without the min_per_client rebalance) samples from
     the union of all clients' pools instead of crashing in rng.choice(0);
-    if every pool is empty there is no data at all and we raise."""
-    nonempty = [np.asarray(p) for p in client_indices if len(p)]
+    if every pool is empty there is no data at all and we raise. The
+    common all-nonempty case never concatenates."""
+    pools = [np.asarray(p) for p in client_indices]
+    nonempty = [p for p in pools if p.size]
     if not nonempty:
-        raise ValueError("make_client_batches: all client index pools are "
+        raise ValueError("client_pools: all client index pools are "
                          "empty — no data to sample")
-    global_pool = (np.concatenate(nonempty) if len(nonempty) <
-                   len(client_indices) else None)
+    if len(nonempty) < len(pools):
+        global_pool = np.concatenate(nonempty)
+        pools = [p if p.size else global_pool for p in pools]
+    return pools
+
+
+def make_client_batches(dataset, client_indices: List[np.ndarray],
+                        round_idx: int, batch_per_client: int,
+                        seed: int = 0, *,
+                        client_ids: Optional[Sequence[int]] = None,
+                        pools: Optional[List[np.ndarray]] = None,
+                        ) -> Dict[str, np.ndarray]:
+    """Stack per-client batches -> leaves with leading client dim.
+
+    ``client_ids`` selects an explicit subset: only those rows are
+    materialized, in the given order — (K, ...) instead of (M, ...). The
+    per-client RNG is keyed on (seed, round, client-id), so the subset
+    path is bit-exact against indexing the fleet-width stack: row j equals
+    full[client_ids[j]] for the same (seed, round).
+
+    ``pools`` supplies pre-resolved index pools (see ``client_pools``) so
+    repeated calls skip the per-client np.asarray pass; when omitted they
+    are resolved here.
+    """
+    if pools is None:
+        pools = client_pools(client_indices)
+    ids = range(len(pools)) if client_ids is None else client_ids
     outs = []
-    for m, idx_pool in enumerate(client_indices):
+    for m in ids:
+        m = int(m)
         rng = np.random.default_rng((seed, round_idx, m))
-        pool = np.asarray(idx_pool) if len(idx_pool) else global_pool
-        take = rng.choice(len(pool), size=batch_per_client,
-                          replace=len(pool) < batch_per_client)
+        pool = pools[m]
+        take = rng.choice(pool.size, size=batch_per_client,
+                          replace=pool.size < batch_per_client)
         outs.append(dataset.batch(pool[take]))
     return {k: np.stack([o[k] for o in outs]) for k in outs[0]}
 
@@ -46,12 +76,33 @@ class FederatedLoader:
     seed: int = 0
     mesh: Optional[jax.sharding.Mesh] = None
     batch_spec: Optional[P] = None        # e.g. P('data') on the M dim
+    _pools: Optional[List[np.ndarray]] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def pools(self) -> List[np.ndarray]:
+        """Per-client index pools, resolved once and cached."""
+        if self._pools is None:
+            self._pools = client_pools(self.client_indices)
+        return self._pools
 
     def round_batch(self, round_idx: int):
         host = make_client_batches(self.dataset, self.client_indices,
-                                   round_idx, self.batch_per_client, self.seed)
+                                   round_idx, self.batch_per_client,
+                                   self.seed, pools=self.pools)
         if self.mesh is None:
             return {k: jax.numpy.asarray(v) for k, v in host.items()}
         spec = self.batch_spec if self.batch_spec is not None else P("data")
         sh = NamedSharding(self.mesh, spec)
         return {k: jax.device_put(v, sh) for k, v in host.items()}
+
+    def subset_batch(self, round_idx: int,
+                     client_ids: Sequence[int]) -> Dict[str, np.ndarray]:
+        """(K, ...) host rows for exactly ``client_ids``, bit-exact with
+        ``round_batch(round_idx)[client_ids]`` — the sparse engine's O(K)
+        staging path (device placement is the engine's concern: sparse
+        chunks are stacked host-side first)."""
+        return make_client_batches(self.dataset, self.client_indices,
+                                   round_idx, self.batch_per_client,
+                                   self.seed, client_ids=client_ids,
+                                   pools=self.pools)

@@ -80,6 +80,20 @@ def main(argv=None):
     ap.add_argument("--ring-capacity", type=int, default=0,
                     help="sparse timeline: in-flight record slots (0 = "
                          "auto: an 8-batch staleness window, capped at M)")
+    ap.add_argument("--loader", default="fleet",
+                    choices=["fleet", "subset"],
+                    help="sparse data staging: 'fleet' gathers each "
+                         "version's rows from a fleet-width (M, ...) stack; "
+                         "'subset' materializes only the <= k_max clients "
+                         "that start each version (O(K) host staging, "
+                         "bit-exact vs the gather) — requires --timeline "
+                         "sparse")
+    ap.add_argument("--fleet-shard", type=int, default=0,
+                    help="shard the arrival-slot ring store, fleet system "
+                         "vectors, and staged commit batches over N devices "
+                         "on a ('data',) mesh (launch/fleet.py; 0 = off, "
+                         "replicated). Requires --async --timeline sparse "
+                         "and ring/k_max geometry divisible by N")
     ap.add_argument("--adaptive-tau", action="store_true",
                     help="re-plan tau at chunk boundaries from the observed "
                          "straggler gap (engine.AdaptiveTau; --tau is the "
@@ -141,6 +155,15 @@ def main(argv=None):
             args.loop = "scan"
         if args.aggregation is None:
             args.aggregation = "dense"
+    if args.loader == "subset" and args.timeline != "sparse":
+        ap.error("--loader subset is the sparse O(K) staging path; it "
+                 "requires --async --timeline sparse")
+    if args.fleet_shard < 0:
+        ap.error(f"--fleet-shard must be >= 0 (0 = off): got "
+                 f"{args.fleet_shard}")
+    if args.fleet_shard and args.timeline != "sparse":
+        ap.error("--fleet-shard places the sparse ring store; it requires "
+                 "--async --timeline sparse")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     # the client fleet: an explicit heterogeneous population, or the
@@ -172,6 +195,22 @@ def main(argv=None):
                     staleness_discount=args.staleness_discount,
                     timeline=args.timeline, k_max=args.k_max,
                     ring_capacity=args.ring_capacity)
+    # resolve the mesh placement BEFORE any device work: geometry errors
+    # (ring/k_max not divisible by the 'data' axis, too few devices) are
+    # launch-time misconfigurations, not mid-run surprises
+    placement = None
+    if args.fleet_shard:
+        if args.fleet_shard > len(jax.devices()):
+            ap.error(f"--fleet-shard {args.fleet_shard} exceeds the "
+                     f"{len(jax.devices())} available devices")
+        from repro.launch.fleet import build_fleet_placement
+        try:
+            placement = build_fleet_placement(
+                sfl, data_devices=args.fleet_shard)
+        except ValueError as e:
+            ap.error(str(e))
+        print(f"fleet placement: ring store sharded over "
+              f"{args.fleet_shard} devices ({placement.plan})")
     key = jax.random.PRNGKey(args.seed)
     params = untie_params(cfg, init_params(cfg, key))
 
@@ -239,12 +278,19 @@ def main(argv=None):
                   f"{int((info.masks[i] > 0).sum())}/{n_clients}  "
                   f"wall {time.time()-t0:.1f}s  sim_t {sim_t:.1f}")
 
+    if placement is not None and state is None:
+        # pre-place the initial ring store so the scan's donated state
+        # carries the 'data'-axis layout from version 0
+        state = placement.place_store(events.init_store(sfl))
     result = engine.run_rounds(
         algo, cfg, sfl, params, loader.round_batch, sched, key,
         rounds=args.rounds, start_round=start_round, state=state,
         chunk_size=args.chunk_size, mode=args.loop, checkpointer=ck,
         ckpt_every=args.ckpt_every, chunk_callback=on_chunk,
-        controller=controller, tau_history=tau_history)
+        controller=controller, tau_history=tau_history,
+        batch_subset_fn=(loader.subset_batch
+                         if args.loader == "subset" else None),
+        batch_put=placement.batch_put if placement is not None else None)
     if controller is not None and controller.trace:
         taus = [t for _, t in controller.trace]
         print(f"adaptive tau: start {args.tau} -> final {taus[-1]} "

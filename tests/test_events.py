@@ -501,6 +501,163 @@ def test_sparse_resume_bit_identical(setup):
     assert maxdiff(full.state, part2.state) == 0.0
 
 
+# ---------------------------------------------------------------------------
+# fleet-scale hot path: cohort-indexed idle sets + O(K) subset staging
+# ---------------------------------------------------------------------------
+
+def test_cohort_index_matches_flatnonzero_reference():
+    """The cohort-bucketed idle index admits exactly
+    ``flatnonzero((mask > 0) & ~busy)[:k_max]`` in ascending client order
+    and counts every candidate — over randomized fleets, masks, k_max,
+    busy churn, and cohort boundaries (exercising virgin-range walks,
+    recycled-heap pops, stale entries, and batch finish)."""
+    from repro.core.population import AvailRow
+    rng = np.random.default_rng(0)
+    for trial in range(40):
+        M_ = int(rng.integers(2, 40))
+        n_cuts = int(rng.integers(0, min(4, M_ - 1) + 1))
+        cuts = (sorted(rng.choice(np.arange(1, M_), size=n_cuts,
+                                  replace=False).tolist())
+                if n_cuts else [])
+        bounds = list(zip([0] + cuts, cuts + [M_]))
+        idx = events._CohortIdleIndex(bounds)
+        busy = np.zeros(M_, bool)
+        for step in range(12):
+            mask = (rng.random(M_)
+                    < rng.uniform(0.1, 1.0)).astype(np.float32)
+            k_max = int(rng.integers(1, M_ + 1))
+            ref = np.flatnonzero((mask > 0) & ~busy)
+            admitted, total = idx.select(AvailRow.from_mask(mask, bounds),
+                                         busy, k_max)
+            assert admitted == ref[:k_max].tolist(), (trial, step)
+            assert total == ref.size, (trial, step)
+            busy[admitted] = True
+            idx.start_batch(admitted)
+            done = np.flatnonzero(busy)
+            fin = rng.choice(done, size=int(rng.integers(0, done.size + 1)),
+                             replace=False)
+            busy[fin] = False
+            idx.finish_batch(fin.tolist())
+
+
+def test_sparse_matches_dense_on_markov_fleets():
+    """Cohort-indexed DES == the dense per-client reference scan on bursty
+    Markov and shared-chain fleets — the availability kinds the sparse
+    mask protocol encodes as 'not_ids'/'none' rows instead of dense
+    masks."""
+    for seed in range(3):
+        pop = ClientPopulation(cohorts=(
+            Cohort(name="a", n=5, delay=DelayModel(base=0.3, scale=0.3),
+                   availability="markov", p_dropout=0.3, p_recover=0.4),
+            Cohort(name="b", n=3, delay=DelayModel(base=2.0, scale=0.5),
+                   availability="markov-shared", p_dropout=0.25,
+                   p_recover=0.5),
+            Cohort(name="c", n=4, delay=DelayModel(base=1.0, scale=0.2),
+                   participation=0.6),
+        ))
+        sched = strag.make_schedule(seed, 6, population=pop, t_server=0.1,
+                                    t_comm=0.05)
+        for quorum, discount in ((0, 1.0), (4, 0.5)):
+            dense = events.compile_timeline(sched, 14, quorum=quorum,
+                                            discount=discount, tau=2)
+            got = events.compile_sparse_timeline(
+                sched, 14, quorum=quorum, discount=discount,
+                tau=2).densify()
+            for f in ("arrival_time", "client_id", "cohort_id",
+                      "round_of_origin", "staleness", "commit_idx",
+                      "start_mask", "apply_w", "staleness_m",
+                      "commit_times", "durations", "quorum_wait",
+                      "applied"):
+                assert np.array_equal(getattr(dense, f),
+                                      getattr(got, f)), (seed, quorum, f)
+
+
+def test_stack_sparse_chunk_subset_matches_gather():
+    """O(K) staging == the fleet-width gather bit for bit, including the
+    pad-row convention: -1 pads clip to client 0 on both paths (their
+    records land in the ring's dropped pad slot)."""
+    Mf = 6
+
+    def batch_fn(r):
+        x = np.arange(Mf * 3, dtype=np.float32).reshape(Mf, 3) + 100.0 * r
+        return {"x": x, "y": np.arange(Mf, dtype=np.int64) * (r + 1)}
+
+    def subset_fn(r, ids):
+        return {k: v[np.asarray(ids)] for k, v in batch_fn(r).items()}
+
+    starts = np.array([[1, 4, -1], [0, 2, 5], [-1, -1, -1]], np.int64)
+    a = engine._stack_sparse_chunk(batch_fn, 3, starts)
+    b = engine._stack_sparse_chunk(batch_fn, 3, starts,
+                                   subset_fn=subset_fn)
+    for k in ("x", "y"):
+        assert np.array_equal(np.asarray(a[k]), np.asarray(b[k])), k
+    assert np.array_equal(np.asarray(b["x"])[0, 2],
+                          batch_fn(3)["x"][0])        # pad row == client 0
+    # batch_put sees the stacked chunk last
+    seen = []
+    engine._stack_sparse_chunk(batch_fn, 3, starts, subset_fn=subset_fn,
+                               batch_put=lambda t: seen.append(t) or t)
+    assert np.array_equal(np.asarray(seen[0]["x"]), np.asarray(b["x"]))
+
+
+def _subset_of(batch_fn):
+    def f(r, ids):
+        b = jax.tree.map(np.asarray, batch_fn(r))
+        idx = np.asarray(ids)
+        return jax.tree.map(lambda x: x[idx], b)
+    return f
+
+
+def test_subset_staging_end_to_end_and_resume(setup):
+    """run_rounds(batch_subset_fn=...) == the gather path bit for bit on
+    the full async sparse trajectory, rejected outside the sparse path,
+    and exact through checkpoint resume."""
+    cfg, params, _, _, batch_fn, key = setup
+    pop = tiered_pop(base_slow=1.0)
+    sched = strag.make_schedule(0, ROUNDS, population=pop, t_server=0.1)
+    sfl = SFLConfig(n_clients=M, tau=2, cut_units=1, lr_server=5e-3,
+                    lr_client=1e-3, lr_global=1.0, population=pop,
+                    quorum=3, staleness_discount=0.5, timeline="sparse")
+    sub_fn = _subset_of(batch_fn)
+    ref = engine.run_rounds("async_mu_splitfed", cfg, sfl, params, batch_fn,
+                            sched, key, rounds=ROUNDS, mode="async",
+                            chunk_size=2)
+    sub = engine.run_rounds("async_mu_splitfed", cfg, sfl, params, batch_fn,
+                            sched, key, rounds=ROUNDS, mode="async",
+                            chunk_size=2, batch_subset_fn=sub_fn)
+    assert np.array_equal(ref.round_loss, sub.round_loss)
+    assert maxdiff(ref.params, sub.params) == 0.0
+    assert maxdiff(ref.state, sub.state) == 0.0
+    with pytest.raises(ValueError, match="O\\(K\\) staging"):
+        engine.run_rounds("async_mu_splitfed", cfg,
+                          dataclasses.replace(sfl, timeline="dense"),
+                          params, batch_fn, sched, key, rounds=2,
+                          mode="async", batch_subset_fn=sub_fn)
+    with pytest.raises(ValueError, match="batch_put"):
+        engine.run_rounds("async_mu_splitfed", cfg,
+                          dataclasses.replace(sfl, timeline="dense"),
+                          params, batch_fn, sched, key, rounds=2,
+                          mode="async", batch_put=lambda t: t)
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        part1 = engine.run_rounds("async_mu_splitfed", cfg, sfl, params,
+                                  batch_fn, sched, key, rounds=4,
+                                  mode="async", chunk_size=2,
+                                  checkpointer=ck, ckpt_every=2,
+                                  batch_subset_fn=sub_fn)
+        ck.wait()
+        p2, s2, meta = engine.restore_run(ck, "async_mu_splitfed", cfg, sfl,
+                                          params, batch_fn)
+        part2 = engine.run_rounds("async_mu_splitfed", cfg, sfl, p2,
+                                  batch_fn, sched, key, rounds=ROUNDS,
+                                  start_round=meta["step"] + 1, state=s2,
+                                  mode="async", chunk_size=2,
+                                  batch_subset_fn=sub_fn)
+    resumed = np.concatenate([part1.round_loss, part2.round_loss])
+    assert np.array_equal(ref.round_loss, resumed)
+    assert maxdiff(ref.params, part2.params) == 0.0
+
+
 def test_sparse_adaptive_tau_matches_dense(setup):
     """The controller re-plans τ mid-run over BOTH backends: the sparse
     stream rebuilds from the re-planned version with the resized ring and

@@ -103,6 +103,26 @@ def test_make_client_batches_empty_pool_falls_back():
         make_client_batches(ds, [np.array([], np.int64)], 0, 2)
 
 
+def test_loader_subset_staging_bit_exact():
+    """subset_batch(r, ids) == round_batch(r)[ids] bit for bit (the
+    sparse engine's O(K) staging path — per-client RNG keyed on (seed,
+    round, client)), including clients on the empty-pool fallback and
+    repeated/unsorted ids; the per-client pools are resolved once and
+    cached on the loader."""
+    ds = SyntheticLM(vocab_size=64, seq_len=16, seed=3)
+    parts = [np.arange(10), np.array([], np.int64), np.arange(10, 20),
+             np.arange(20, 24)]
+    loader = FederatedLoader(ds, parts, batch_per_client=2, seed=9)
+    assert loader.pools is loader.pools         # resolved once, cached
+    for r in (0, 7):
+        full = {k: np.asarray(v) for k, v in loader.round_batch(r).items()}
+        for ids in ([2, 0], [1, 1, 3], np.array([3])):
+            sub = loader.subset_batch(r, ids)
+            idx = np.asarray(ids)
+            for k in full:
+                assert np.array_equal(full[k][idx], sub[k]), (r, k)
+
+
 def test_synthetic_lm_learnable_structure():
     ds = SyntheticLM(vocab_size=64, seq_len=256, seed=0)
     s = ds.sample(0)

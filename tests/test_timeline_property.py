@@ -10,6 +10,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import events
 from repro.core import straggler as strag
+from repro.core.population import (AvailRow, ClientPopulation, Cohort,
+                                   DelayModel)
 
 SET = dict(max_examples=20, deadline=None)
 
@@ -94,6 +96,85 @@ def test_sparse_equals_dense_on_random_fleets(p):
               "commit_times", "durations", "quorum_wait", "applied",
               "tau_per_version"):
         assert np.array_equal(getattr(dense, f), getattr(got, f)), f
+
+
+COHORT = st.fixed_dictionaries(dict(
+    n=st.integers(1, 6),
+    base=st.floats(0.1, 3.0, allow_nan=False),
+    scale=st.floats(0.0, 1.0, allow_nan=False),
+    availability=st.sampled_from(["iid", "markov", "markov-shared"]),
+    p_dropout=st.floats(0.0, 0.6, allow_nan=False),
+    p_recover=st.floats(0.1, 1.0, allow_nan=False),
+    part=st.floats(0.3, 1.0, allow_nan=False),
+))
+
+MARKOV_FLEET = st.fixed_dictionaries(dict(
+    seed=st.integers(0, 2**31 - 1),
+    cohorts=st.lists(COHORT, min_size=1, max_size=3),
+    V=st.integers(0, 16),
+    quorum=st.integers(0, 8),
+    discount=DYADIC,
+))
+
+
+@settings(**SET)
+@given(p=MARKOV_FLEET)
+def test_cohort_index_equals_dense_scan_on_markov_fleets(p):
+    """The cohort-indexed idle sets reproduce the dense compiler's
+    per-client ``flatnonzero``-style reference scan field-for-field on
+    random heterogeneous fleets with bursty Markov and shared-chain
+    availability — the kinds the streaming mask protocol encodes as
+    sparse 'ids'/'not_ids'/'none' rows."""
+    pop = ClientPopulation(cohorts=tuple(
+        Cohort(name=f"c{i}", n=c["n"],
+               delay=DelayModel(base=c["base"], scale=c["scale"]),
+               participation=c["part"], availability=c["availability"],
+               p_dropout=c["p_dropout"], p_recover=c["p_recover"])
+        for i, c in enumerate(p["cohorts"])))
+    sched = strag.make_schedule(p["seed"], 4, population=pop,
+                                t_server=0.2, t_comm=0.05)
+    q = min(p["quorum"], pop.n_clients)
+    dense = events.compile_timeline(sched, p["V"], quorum=q,
+                                    discount=p["discount"], tau=2)
+    got = events.compile_sparse_timeline(sched, p["V"], quorum=q,
+                                         discount=p["discount"],
+                                         tau=2).densify()
+    for f in ("arrival_time", "client_id", "cohort_id", "round_of_origin",
+              "staleness", "commit_idx", "start_mask", "apply_w",
+              "staleness_m", "commit_times", "durations", "quorum_wait",
+              "applied"):
+        assert np.array_equal(getattr(dense, f), getattr(got, f)), f
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1), n_steps=st.integers(1, 12))
+def test_idle_index_select_is_flatnonzero(seed, n_steps):
+    """Direct contract of _CohortIdleIndex.select: admitted ids ==
+    ``flatnonzero((mask > 0) & ~busy)[:k_max]`` and the candidate count
+    is exact, under arbitrary start/finish churn."""
+    rng = np.random.default_rng(seed)
+    M_ = int(rng.integers(2, 40))
+    n_cuts = int(rng.integers(0, min(4, M_ - 1) + 1))
+    cuts = (sorted(rng.choice(np.arange(1, M_), size=n_cuts,
+                              replace=False).tolist()) if n_cuts else [])
+    bounds = list(zip([0] + cuts, cuts + [M_]))
+    idx = events._CohortIdleIndex(bounds)
+    busy = np.zeros(M_, bool)
+    for _ in range(n_steps):
+        mask = (rng.random(M_) < rng.uniform(0.1, 1.0)).astype(np.float32)
+        k_max = int(rng.integers(1, M_ + 1))
+        ref = np.flatnonzero((mask > 0) & ~busy)
+        admitted, total = idx.select(AvailRow.from_mask(mask, bounds),
+                                     busy, k_max)
+        assert admitted == ref[:k_max].tolist()
+        assert total == ref.size
+        busy[admitted] = True
+        idx.start_batch(admitted)
+        done = np.flatnonzero(busy)
+        fin = rng.choice(done, size=int(rng.integers(0, done.size + 1)),
+                         replace=False)
+        busy[fin] = False
+        idx.finish_batch(fin.tolist())
 
 
 @settings(**SET)
