@@ -313,6 +313,20 @@ def smoke(seed: int = 0) -> None:
     print("smoke: dense compiler refuses M >= "
           f"{DENSE_REFUSE_M:,} with a size estimate")
 
+    # 6) static-analysis gate on the hot path: the event engine and the
+    #    schedule sampler must pass repro.analysis clean (RNG discipline,
+    #    host-sync, donation safety, ... — see analysis/baseline.json)
+    from repro.analysis import check_clean
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    targets = [os.path.join(repo, "src", "repro", "core", "events.py"),
+               os.path.join(repo, "src", "repro", "core", "straggler.py")]
+    new, _ = check_clean(targets,
+                         os.path.join(repo, "analysis", "baseline.json"))
+    assert not new, "analyzer findings on the timeline hot path:\n" + \
+        "\n".join(f.render() for f in new)
+    print("smoke: repro.analysis clean on core/events.py + "
+          "core/straggler.py (0 new findings)")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()

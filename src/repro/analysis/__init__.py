@@ -1,0 +1,23 @@
+"""repro.analysis — invariant-aware static analysis for this repo.
+
+``python -m repro.analysis src/`` lints the tree against the invariants
+the CI equivalence gates rest on (RNG discipline, jit-cache discipline,
+host-sync-free streamed loops, donation safety, Pallas/SMEM budgets,
+mesh-axis-valid PartitionSpecs), exits non-zero on any finding not in
+``analysis/baseline.json`` and not suppressed inline with
+``# lint: ignore[rule-id]``. See README "Invariants & static analysis".
+"""
+from repro.analysis.core import (Finding, Rule, analyze_paths,
+                                 analyze_source, default_rules,
+                                 load_baseline, save_baseline, split_new)
+
+__all__ = ["Finding", "Rule", "analyze_paths", "analyze_source",
+           "default_rules", "load_baseline", "save_baseline", "split_new",
+           "check_clean"]
+
+
+def check_clean(paths, baseline_path: str = "analysis/baseline.json"):
+    """(new_findings, baselined) for ``paths`` — the programmatic gate
+    bench_timeline --smoke and the CI job share with the CLI."""
+    findings = analyze_paths(list(paths))
+    return split_new(findings, load_baseline(baseline_path))

@@ -1,0 +1,85 @@
+"""CLI: python -m repro.analysis [paths...] [options].
+
+Exit status: 0 when every finding is baselined or suppressed, 1 when new
+findings exist (the CI contract), 2 on usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import core
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Invariant-aware static analysis (RNG discipline, "
+                    "jit-cache/trace leaks, host syncs, donation safety, "
+                    "Pallas budgets, PartitionSpec axes).")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/directories to analyze (default: src)")
+    ap.add_argument("--baseline", default="analysis/baseline.json",
+                    help="accepted-findings file (default: "
+                         "analysis/baseline.json)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write ALL current findings to the baseline and "
+                         "exit 0 (add a 'note' per entry afterwards)")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="also write findings (new + baselined) as JSON")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print rule ids + what invariant each protects")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="treat every finding as new (audit mode)")
+    args = ap.parse_args(argv)
+
+    rules = core.default_rules()
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.id}\n    {r.doc}")
+        return 0
+    if args.rules:
+        wanted = {s.strip() for s in args.rules.split(",")}
+        unknown = wanted - {r.id for r in rules}
+        if unknown:
+            print(f"unknown rule id(s): {sorted(unknown)}", file=sys.stderr)
+            return 2
+        rules = [r for r in rules if r.id in wanted]
+
+    paths = args.paths or ["src"]
+    findings = core.analyze_paths(paths, rules)
+
+    if args.update_baseline:
+        core.save_baseline(args.baseline, findings)
+        print(f"baseline updated: {len(findings)} finding(s) -> "
+              f"{args.baseline}")
+        return 0
+
+    baseline = [] if args.no_baseline else core.load_baseline(args.baseline)
+    new, old = core.split_new(findings, baseline)
+
+    if args.report:
+        with open(args.report, "w", encoding="utf-8") as fh:
+            json.dump({"new": [f.to_json() for f in new],
+                       "baselined": [f.to_json() for f in old]},
+                      fh, indent=2)
+            fh.write("\n")
+
+    for f in new:
+        print(f.render())
+    tail = (f", {len(old)} baselined" if old else "")
+    if new:
+        print(f"\n{len(new)} new finding(s){tail} — fix them, suppress "
+              "with '# lint: ignore[rule-id]', or accept via "
+              "--update-baseline (with a rationale note)")
+        return 1
+    print(f"analysis clean: 0 new findings{tail} "
+          f"({len(core.iter_py_files(paths))} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

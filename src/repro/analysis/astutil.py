@@ -1,0 +1,179 @@
+"""Shared AST machinery for the analysis rules.
+
+Rules work on plain ``ast`` trees with two extras provided here: parent
+links (``node.parent``) so a rule can ask "am I inside a loop / a lambda
+passed to ``_cached_jit``?", and import-alias resolution so ``np.random
+.default_rng`` and ``numpy.random.default_rng`` (or ``from jax import
+random as jr; jr.split``) normalize to one canonical dotted name before
+any rule matches on it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Union
+
+FuncScope = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+SCOPE_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+LOOP_NODES = (ast.For, ast.While, ast.AsyncFor)
+
+
+def attach_parents(tree: ast.AST) -> ast.AST:
+    """Set ``child.parent`` for every node (module root has parent None)."""
+    tree.parent = None                                   # type: ignore
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child.parent = node                          # type: ignore
+    return tree
+
+
+def ancestors(node: ast.AST) -> Iterator[ast.AST]:
+    cur = getattr(node, "parent", None)
+    while cur is not None:
+        yield cur
+        cur = getattr(cur, "parent", None)
+
+
+def enclosing(node: ast.AST, kinds) -> Optional[ast.AST]:
+    for anc in ancestors(node):
+        if isinstance(anc, kinds):
+            return anc
+    return None
+
+
+def in_loop(node: ast.AST, *, within: Optional[ast.AST] = None) -> bool:
+    """True if ``node`` sits inside a for/while body, without crossing into
+    a nested function scope (a closure defined in a loop runs once per
+    *call*, not per iteration). ``within`` bounds the walk."""
+    for anc in ancestors(node):
+        if anc is within:
+            return False
+        if isinstance(anc, SCOPE_NODES):
+            return False
+        if isinstance(anc, LOOP_NODES):
+            return True
+    return False
+
+
+def scope_walk(scope: ast.AST) -> Iterator[ast.AST]:
+    """Descendants of ``scope`` that belong to it — nested function/lambda
+    scopes are yielded but not entered (their bodies are someone else's
+    scope)."""
+    stack = list(ast.iter_child_nodes(scope))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, SCOPE_NODES):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+def scope_nodes_ordered(scope: ast.AST) -> list:
+    """scope_walk in source order (lineno, col)."""
+    return sorted(scope_walk(scope), key=lambda n: (getattr(n, "lineno", 0),
+                                                    getattr(n, "col_offset",
+                                                            0)))
+
+
+def collect_aliases(tree: ast.AST) -> Dict[str, str]:
+    """Map local names to canonical dotted module paths.
+
+    ``import numpy as np``            -> {'np': 'numpy'}
+    ``import jax.numpy as jnp``       -> {'jnp': 'jax.numpy'}
+    ``from jax import random as jr``  -> {'jr': 'jax.random'}
+    ``from repro.kernels.zo_update import zo_replay_flat``
+                                      -> {'zo_replay_flat': 'repro.kernels.
+                                          zo_update.zo_replay_flat'}
+    """
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+                if a.asname:
+                    aliases[a.asname] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for Name/Attribute chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def resolve_name(node: ast.AST, aliases: Dict[str, str]) -> Optional[str]:
+    """Canonical dotted name of a Name/Attribute expression, with the
+    leading segment resolved through the module's import aliases."""
+    dn = dotted_name(node)
+    if dn is None:
+        return None
+    head, _, rest = dn.partition(".")
+    full = aliases.get(head, head)
+    return f"{full}.{rest}" if rest else full
+
+
+def call_name(call: ast.Call, aliases: Dict[str, str]) -> Optional[str]:
+    return resolve_name(call.func, aliases)
+
+
+def assigned_names(target: ast.AST) -> Iterator[str]:
+    """Flat names bound by an assignment target (tuples recursed)."""
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            yield from assigned_names(elt)
+    elif isinstance(target, ast.Starred):
+        yield from assigned_names(target.value)
+
+
+def const_int(node: ast.AST, consts: Dict[str, int]) -> Optional[int]:
+    """Fold an expression to an int using module-level constants: literals,
+    names, unary minus, and + - * // << arithmetic. None when dynamic."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.Name):
+        return consts.get(node.id)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = const_int(node.operand, consts)
+        return None if v is None else -v
+    if isinstance(node, ast.BinOp):
+        lhs = const_int(node.left, consts)
+        rhs = const_int(node.right, consts)
+        if lhs is None or rhs is None:
+            return None
+        if isinstance(node.op, ast.Add):
+            return lhs + rhs
+        if isinstance(node.op, ast.Sub):
+            return lhs - rhs
+        if isinstance(node.op, ast.Mult):
+            return lhs * rhs
+        if isinstance(node.op, ast.FloorDiv) and rhs != 0:
+            return lhs // rhs
+        if isinstance(node.op, ast.LShift):
+            return lhs << rhs
+    return None
+
+
+def module_consts(tree: ast.AST) -> Dict[str, int]:
+    """Module-level integer constants (top-level ``NAME = <int expr>``)."""
+    consts: Dict[str, int] = {}
+    for stmt in getattr(tree, "body", []):
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            v = const_int(stmt.value, consts)
+            if v is not None:
+                consts[stmt.targets[0].id] = v
+    return consts

@@ -1,0 +1,205 @@
+"""Finding model, inline suppressions, baseline, and the analysis runner.
+
+The contract (mirrors how the CI gate consumes this):
+
+* every rule emits ``Finding`` records (file, line, rule id, severity,
+  message);
+* ``# lint: ignore[rule-id]`` on the flagged line (or alone on the line
+  above) suppresses that rule there; bare ``# lint: ignore`` suppresses
+  every rule on the line;
+* ``analysis/baseline.json`` holds accepted pre-existing findings keyed on
+  (rule, path, source-line text) — line *numbers* are not part of the key,
+  so unrelated edits don't invalidate the baseline, but touching a
+  baselined line re-surfaces its finding;
+* the CLI exits non-zero only on findings that are neither suppressed nor
+  baselined ("new" findings).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis import astutil
+
+_IGNORE_RE = re.compile(r"#\s*lint:\s*ignore(?:\[([A-Za-z0-9_,\- ]+)\])?")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str            # rule id, e.g. 'rng-discipline'
+    path: str            # path as given to the runner (repo-relative in CI)
+    line: int            # 1-indexed
+    severity: str        # 'error' | 'warning'
+    message: str
+    code: str = ""       # stripped source line (the baseline key context)
+
+    def key(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path.replace(os.sep, "/"), self.code)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: [{self.rule}] "
+                f"{self.severity}: {self.message}")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Rule:
+    """Base rule: subclasses set ``id``/``doc`` and implement ``check``."""
+
+    id: str = ""
+    doc: str = ""
+
+    def check(self, ctx: "FileContext") -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: "FileContext", node: ast.AST, message: str,
+                severity: str = "error") -> Finding:
+        line = getattr(node, "lineno", 0)
+        return Finding(rule=self.id, path=ctx.path, line=line,
+                       severity=severity, message=message,
+                       code=ctx.line_text(line))
+
+
+class FileContext:
+    """One parsed file handed to every rule: tree (with parents), source
+    lines, and resolved import aliases."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = astutil.attach_parents(ast.parse(source, filename=path))
+        self.aliases = astutil.collect_aliases(self.tree)
+        self.consts = astutil.module_consts(self.tree)
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def suppressed(self, finding: Finding) -> bool:
+        """Inline ``# lint: ignore[...]`` on the line or alone above it."""
+        for ln in (finding.line, finding.line - 1):
+            if not 1 <= ln <= len(self.lines):
+                continue
+            text = self.lines[ln - 1]
+            m = _IGNORE_RE.search(text)
+            if not m:
+                continue
+            if ln == finding.line - 1 and not text.strip().startswith("#"):
+                continue             # line above counts only if comment-only
+            rules = m.group(1)
+            if rules is None:
+                return True
+            if finding.rule in {r.strip() for r in rules.split(",")}:
+                return True
+        return False
+
+
+def default_rules() -> List[Rule]:
+    from repro.analysis.rules_jit import (DonationSafety, HostSync,
+                                          TraceLeak)
+    from repro.analysis.rules_pallas import PallasBudget
+    from repro.analysis.rules_rng import JaxKeyReuse, RngDiscipline
+    return [RngDiscipline(), JaxKeyReuse(), TraceLeak(), HostSync(),
+            DonationSafety(), PallasBudget()]
+
+
+def iter_py_files(paths: Sequence[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+        else:
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                out.extend(os.path.join(root, f) for f in sorted(files)
+                           if f.endswith(".py"))
+    return out
+
+
+def analyze_source(source: str, path: str = "<string>",
+                   rules: Optional[Sequence[Rule]] = None,
+                   *, keep_suppressed: bool = False) -> List[Finding]:
+    """All findings for one source blob (inline suppressions applied)."""
+    ctx = FileContext(path, source)
+    found: List[Finding] = []
+    for rule in (rules if rules is not None else default_rules()):
+        for f in rule.check(ctx):
+            if keep_suppressed or not ctx.suppressed(f):
+                found.append(f)
+    return sorted(found, key=lambda f: (f.path, f.line, f.rule))
+
+
+def analyze_paths(paths: Sequence[str],
+                  rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
+    """Findings across files/dirs. Unparseable files yield a finding
+    rather than crashing the run (rule id 'parse-error')."""
+    found: List[Finding] = []
+    for fp in iter_py_files(paths):
+        with open(fp, "r", encoding="utf-8") as fh:
+            src = fh.read()
+        try:
+            found.extend(analyze_source(src, fp, rules))
+        except SyntaxError as e:
+            found.append(Finding(rule="parse-error", path=fp,
+                                 line=e.lineno or 0, severity="error",
+                                 message=f"file does not parse: {e.msg}"))
+    return found
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: str) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    return list(data.get("findings", []))
+
+
+def save_baseline(path: str, findings: Sequence[Finding],
+                  notes: Optional[Dict[Tuple[str, str, str], str]] = None
+                  ) -> None:
+    entries = []
+    for f in findings:
+        e = {"rule": f.rule, "path": f.path.replace(os.sep, "/"),
+             "code": f.code, "message": f.message}
+        if notes and f.key() in notes:
+            e["note"] = notes[f.key()]
+        entries.append(e)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"comment": "Accepted findings: python -m repro.analysis "
+                              "--update-baseline. Each entry should carry a "
+                              "one-line 'note' saying why it is deliberate.",
+                   "findings": entries}, fh, indent=2)
+        fh.write("\n")
+
+
+def split_new(findings: Sequence[Finding], baseline: Sequence[dict]
+              ) -> Tuple[List[Finding], List[Finding]]:
+    """(new, baselined). Baseline entries match at most once each (multiset
+    semantics: a second identical violation on another line is new)."""
+    budget: Dict[Tuple[str, str, str], int] = {}
+    for e in baseline:
+        k = (e.get("rule", ""), e.get("path", ""), e.get("code", ""))
+        budget[k] = budget.get(k, 0) + 1
+    new: List[Finding] = []
+    old: List[Finding] = []
+    for f in findings:
+        k = f.key()
+        if budget.get(k, 0) > 0:
+            budget[k] -= 1
+            old.append(f)
+        else:
+            new.append(f)
+    return new, old

@@ -1,0 +1,293 @@
+"""jit-discipline rules: trace leaks, host syncs in streamed loops, and
+donation safety.
+
+The engine's perf ladder rests on three properties of how jit is used:
+executables are cached per (algo, cfg, sfl) instead of re-traced per call
+(`_cached_jit`, `decode_step_jit`); nothing inside the chunked scan /
+sparse stream loop forces a device->host sync (the only sanctioned sync
+is the per-chunk `flush`); and buffers listed in ``donate_argnums`` are
+dead after the call. PR 4's trace-count regression test catches the first
+dynamically — these rules catch all three at review time.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis import astutil
+from repro.analysis.core import FileContext, Finding, Rule
+
+_JIT_NAMES = {"jax.jit", "jax.pmap", "jax.experimental.pjit.pjit"}
+_CACHE_DECORATORS = {"functools.lru_cache", "functools.cache", "lru_cache",
+                     "cache"}
+# registries the engine routes jit construction through — a jax.jit inside
+# a lambda/def handed to one of these is cached, not leaked
+_JIT_REGISTRIES = {"_cached_jit"}
+
+# host-sync coercions: calls that force the device stream to flush
+_COERCIONS = {"float", "int", "bool", "complex"}
+_NP_COERCIONS = {"numpy.asarray", "numpy.array", "numpy.float64",
+                 "numpy.float32", "numpy.int64"}
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+
+
+def _resolved(ctx: FileContext, node: ast.AST) -> Optional[str]:
+    return astutil.resolve_name(node, ctx.aliases)
+
+
+def _is_jit_call(ctx: FileContext, node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and astutil.call_name(node, ctx.aliases) in _JIT_NAMES)
+
+
+class TraceLeak(Rule):
+    id = "trace-leak"
+    doc = ("jax.jit(...) constructed inside a function body re-traces on "
+           "every call (jit caches by function identity, which a fresh "
+           "closure defeats) — route it through the _cached_jit / "
+           "decode_step_jit registries, an lru_cache'd builder, or a "
+           "module-level registry store.")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not _is_jit_call(ctx, node):
+                continue
+            scope = astutil.enclosing(node, astutil.SCOPE_NODES)
+            if scope is None:
+                continue                       # module-level: traced once
+            if self._via_registry(ctx, node):
+                continue
+            if self._cached_builder(ctx, node, scope):
+                continue
+            yield self.finding(
+                ctx, node,
+                "jax.jit constructed inside a function body — every call "
+                "re-traces and re-compiles; go through _cached_jit / a "
+                "module-level registry (the bug PR 4's trace-count "
+                "regression test catches dynamically)")
+
+    def _via_registry(self, ctx: FileContext, node: ast.AST) -> bool:
+        """Inside a lambda/def passed as an argument to _cached_jit(...)."""
+        child = node
+        for anc in astutil.ancestors(node):
+            if isinstance(anc, ast.Call):
+                name = astutil.call_name(anc, ctx.aliases) or ""
+                if name.split(".")[-1] in _JIT_REGISTRIES \
+                        and child is not anc.func:
+                    return True
+            child = anc
+        return False
+
+    def _cached_builder(self, ctx: FileContext, node: ast.AST,
+                        scope: ast.AST) -> bool:
+        """The enclosing function memoizes: decorated with lru_cache/cache,
+        or it stores the jit result into a subscripted registry
+        (``_REG[key] = fn`` — the decode_step_jit pattern)."""
+        fns = [a for a in [scope, *astutil.ancestors(scope)]
+               if isinstance(a, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        if not fns:
+            return False
+        fn = fns[0]
+        for dec in fn.decorator_list:
+            d = dec.func if isinstance(dec, ast.Call) else dec
+            if _resolved(ctx, d) in _CACHE_DECORATORS:
+                return True
+        # names the jit result is bound to inside this function
+        bound: Set[str] = set()
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Assign) and n.value is node:
+                for t in n.targets:
+                    bound.update(astutil.assigned_names(t))
+        if not bound:
+            return False
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Assign):
+                for t in n.targets:
+                    if isinstance(t, ast.Subscript) \
+                            and isinstance(n.value, ast.Name) \
+                            and n.value.id in bound:
+                        return True
+        return False
+
+
+def _jitted_bindings(ctx: FileContext, scope: ast.AST
+                     ) -> Dict[str, Optional[ast.Call]]:
+    """Names in ``scope`` bound to a jit'd callable: direct ``v = jax.jit
+    (...)``, via the registry ``v = _cached_jit(..., lambda: jax.jit(...))``,
+    from a ``*_jit`` factory (``step = decode_step_jit(cfg)``), or a
+    ``*_jit``-named parameter. Maps name -> the jax.jit call when visible
+    (for donate_argnums inspection), else the factory call or None."""
+    out: Dict[str, ast.Call] = {}
+    if isinstance(scope, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        # a parameter named like a jit'd callable (step_jit, chunk_jit)
+        # is one by contract — callers hand in cached executables
+        for a in scope.args.args + scope.args.kwonlyargs:
+            if a.arg.endswith("_jit"):
+                out[a.arg] = None       # no jit call to inspect
+    for n in astutil.scope_walk(scope):
+        if not (isinstance(n, ast.Assign) and isinstance(n.value, ast.Call)):
+            continue
+        call = n.value
+        jit_call: Optional[ast.Call] = None
+        if _is_jit_call(ctx, call):
+            jit_call = call
+        else:
+            name = astutil.call_name(call, ctx.aliases) or ""
+            tail = name.split(".")[-1]
+            if tail in _JIT_REGISTRIES:
+                for sub in ast.walk(call):
+                    if sub is not call and _is_jit_call(ctx, sub):
+                        jit_call = sub
+                        break
+                jit_call = jit_call or call
+            elif tail.endswith("_jit"):
+                jit_call = call
+        if jit_call is not None:
+            for t in n.targets:
+                for nm in astutil.assigned_names(t):
+                    out[nm] = jit_call
+    return out
+
+
+class HostSync(Rule):
+    id = "host-sync"
+    doc = ("float()/int()/bool()/.item()/np.asarray() applied inside a "
+           "for/while loop to a value returned by a jit'd executable "
+           "blocks the async dispatch stream every iteration — the "
+           "engine's only sanctioned sync is the per-chunk flush at the "
+           "loop boundary.")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        module_jitted = _jitted_bindings(ctx, ctx.tree)
+        scopes = [ctx.tree] + [n for n in ast.walk(ctx.tree)
+                               if isinstance(n, astutil.SCOPE_NODES)]
+        for scope in scopes:
+            yield from self._check_scope(ctx, scope, module_jitted)
+
+    def _check_scope(self, ctx: FileContext, scope: ast.AST,
+                     module_jitted: Dict[str, Optional[ast.Call]]
+                     ) -> Iterable[Finding]:
+        jitted = dict(module_jitted) if scope is not ctx.tree else {}
+        jitted.update(_jitted_bindings(ctx, scope))
+        if not jitted:
+            return
+        # taint: names assigned (incl. tuple-unpacked) from a jitted call
+        tainted: Set[str] = set()
+        for n in astutil.scope_walk(scope):
+            if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call):
+                f = n.value.func
+                if isinstance(f, ast.Name) and f.id in jitted:
+                    for t in n.targets:
+                        tainted.update(astutil.assigned_names(t))
+        if not tainted:
+            return
+
+        def is_tainted(e: ast.AST) -> bool:
+            while isinstance(e, (ast.Subscript, ast.Attribute)):
+                e = e.value
+            return isinstance(e, ast.Name) and e.id in tainted
+
+        for n in astutil.scope_walk(scope):
+            if not isinstance(n, ast.Call):
+                continue
+            if not astutil.in_loop(n, within=scope):
+                continue
+            name = astutil.call_name(n, ctx.aliases)
+            hit = None
+            if name in _COERCIONS or name in _NP_COERCIONS:
+                if n.args and is_tainted(n.args[0]):
+                    hit = name
+            elif isinstance(n.func, ast.Attribute) \
+                    and n.func.attr in _SYNC_METHODS \
+                    and is_tainted(n.func.value):
+                hit = f".{n.func.attr}()"
+            if hit:
+                yield self.finding(
+                    ctx, n,
+                    f"{hit} on a jit output inside the loop forces a "
+                    "device->host sync per iteration — keep the loop "
+                    "async and sync once at the chunk boundary (flush)")
+
+
+class DonationSafety(Rule):
+    id = "donation-safety"
+    doc = ("An argument passed at a donate_argnums position is invalidated "
+           "by the call — reading that variable afterwards touches a "
+           "deleted buffer (jit'd code may have aliased it to the output).")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        module_jitted = _jitted_bindings(ctx, ctx.tree)
+        scopes = [ctx.tree] + [n for n in ast.walk(ctx.tree)
+                               if isinstance(n, astutil.SCOPE_NODES)]
+        for scope in scopes:
+            yield from self._check_scope(ctx, scope, module_jitted)
+
+    def _donated_argnums(self, jit_call: ast.Call) -> Tuple[int, ...]:
+        for kw in jit_call.keywords:
+            if kw.arg == "donate_argnums":
+                if isinstance(kw.value, (ast.Tuple, ast.List)):
+                    out = []
+                    for e in kw.value.elts:
+                        if isinstance(e, ast.Constant) \
+                                and isinstance(e.value, int):
+                            out.append(e.value)
+                    return tuple(out)
+                if isinstance(kw.value, ast.Constant) \
+                        and isinstance(kw.value.value, int):
+                    return (kw.value.value,)
+        return ()
+
+    def _check_scope(self, ctx: FileContext, scope: ast.AST,
+                     module_jitted: Dict[str, Optional[ast.Call]]
+                     ) -> Iterable[Finding]:
+        jitted = dict(module_jitted) if scope is not ctx.tree else {}
+        jitted.update(_jitted_bindings(ctx, scope))
+        donators: Dict[str, Tuple[int, ...]] = {}
+        for nm, jit_call in jitted.items():
+            nums = self._donated_argnums(jit_call) if jit_call is not None \
+                else ()
+            if nums:
+                donators[nm] = nums
+        if not donators:
+            return
+        nodes = [n for n in astutil.scope_nodes_ordered(scope)
+                 if hasattr(n, "lineno")]
+        # donated[name] = the donating Call node; cleared on reassignment
+        donated: Dict[str, ast.Call] = {}
+        for n in nodes:
+            if isinstance(n, ast.Assign):
+                rebound = set()
+                for t in n.targets:
+                    rebound.update(astutil.assigned_names(t))
+                call = n.value if isinstance(n.value, ast.Call) else None
+                self._note_call(call, donators, donated, rebound)
+                for nm in rebound:
+                    donated.pop(nm, None)
+            elif isinstance(n, ast.Expr) and isinstance(n.value, ast.Call):
+                self._note_call(n.value, donators, donated, set())
+            elif isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) \
+                    and n.id in donated:
+                call = donated[n.id]
+                if any(anc is call for anc in astutil.ancestors(n)):
+                    continue        # the donating call's own argument
+                yield self.finding(
+                    ctx, n,
+                    f"'{n.id}' was donated to the jit'd call on line "
+                    f"{call.lineno} — its buffer may already be reused; "
+                    "copy before the call or rebind the result")
+                donated.pop(n.id, None)         # one finding per donation
+
+    def _note_call(self, call: Optional[ast.Call],
+                   donators: Dict[str, Tuple[int, ...]],
+                   donated: Dict[str, ast.Call],
+                   rebound: Set[str]) -> None:
+        if call is None or not isinstance(call.func, ast.Name):
+            return
+        nums = donators.get(call.func.id)
+        if not nums:
+            return
+        for i in nums:
+            if i < len(call.args) and isinstance(call.args[i], ast.Name):
+                nm = call.args[i].id
+                if nm not in rebound:
+                    donated[nm] = call

@@ -1,0 +1,196 @@
+"""Kernel-budget and sharding-spec rules.
+
+Pallas kernels fail at *lowering* (or worse, at runtime on a different
+chip) when a BlockSpec violates the TPU tiling grid or a scratch/operand
+footprint exceeds the per-core memories; PartitionSpecs fail at pjit time
+when an axis name doesn't exist on the mesh. Both are knowable from the
+source: block shapes here are module-level constants, and the repo's mesh
+axes are a closed set ('pod', 'data', 'model' — launch/mesh.py,
+launch/fleet.py's ('data',) fleet mesh).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Tuple
+
+from repro.analysis import astutil
+from repro.analysis.core import FileContext, Finding, Rule
+
+# per-core budgets (TPU generations vary; these are the conservative
+# floors the kernels are written against — see /opt guides + kernels/
+# zo_update.py's own comments: VMEM ~16 MiB, SMEM tens of KiB)
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+SMEM_BUDGET_BYTES = 64 * 1024
+# f32 tiling grid: last dim multiple of 128 lanes, second-to-last of 8
+LANE_MULTIPLE = 128
+SUBLANE_MULTIPLE = 8
+
+# the repo's declared mesh axes (sharding/specs.py DEFAULT_AXIS_SIZES,
+# launch/mesh.py, launch/fleet.py)
+MESH_AXES = frozenset({"pod", "data", "model"})
+
+# raw kernel entry points whose SMEM chunking lives in kernels/ops.py —
+# calling them anywhere else bypasses the REPLAY_SMEM_RECORDS budget
+_RAW_KERNELS = {"repro.kernels.zo_update.zo_replay_flat",
+                "repro.kernels.zo_update.zo_update_flat"}
+_BUDGET_LAYER = "repro/kernels/"
+
+_BLOCKSPEC_NAMES = {"pl.BlockSpec", "pallas.BlockSpec",
+                    "jax.experimental.pallas.BlockSpec"}
+_PSPEC_NAMES = {"jax.sharding.PartitionSpec",
+                "jax.experimental.pjit.PartitionSpec"}
+
+
+class PallasBudget(Rule):
+    id = "pallas-budget"
+    doc = ("Static SMEM/VMEM footprints and BlockSpec tiling for Pallas "
+           "kernels (REPLAY_SMEM_RECORDS-style budgets), plus "
+           "PartitionSpec axis names validated against the declared mesh "
+           "axes {'pod','data','model'}.")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        yield from self._check_blockspecs(ctx)
+        yield from self._check_smem_budget_consts(ctx)
+        yield from self._check_raw_kernel_calls(ctx)
+        yield from self._check_pspecs(ctx)
+
+    # -- BlockSpec tiling + VMEM footprint --------------------------------
+
+    def _blockspec_dims(self, ctx: FileContext, call: ast.Call
+                        ) -> Optional[List[Optional[int]]]:
+        shape = call.args[0] if call.args else None
+        for kw in call.keywords:
+            if kw.arg == "block_shape":
+                shape = kw.value
+        if not isinstance(shape, (ast.Tuple, ast.List)):
+            return None
+        return [astutil.const_int(e, ctx.consts) for e in shape.elts]
+
+    def _is_smem_spec(self, ctx: FileContext, call: ast.Call) -> bool:
+        for kw in call.keywords:
+            if kw.arg == "memory_space":
+                name = astutil.resolve_name(kw.value, ctx.aliases) or ""
+                return name.endswith(".SMEM") or name == "SMEM"
+        return False
+
+    def _check_blockspecs(self, ctx: FileContext) -> Iterable[Finding]:
+        per_call_vmem: List[Tuple[ast.Call, int]] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = astutil.call_name(node, ctx.aliases) or ""
+            if name not in _BLOCKSPEC_NAMES \
+                    and not name.endswith(".BlockSpec"):
+                continue
+            dims = self._blockspec_dims(ctx, node)
+            if dims is None:
+                continue
+            smem = self._is_smem_spec(ctx, node)
+            if smem:
+                known = [d for d in dims if d is not None]
+                if known:
+                    bytes_ = 4
+                    for d in known:
+                        bytes_ *= d
+                    if bytes_ > SMEM_BUDGET_BYTES:
+                        yield self.finding(
+                            ctx, node,
+                            f"SMEM BlockSpec holds ~{bytes_} B > the "
+                            f"{SMEM_BUDGET_BYTES} B per-core scalar-memory "
+                            "budget — chunk the operand (the "
+                            "REPLAY_SMEM_RECORDS pattern in kernels/ops.py)")
+                continue
+            if len(dims) >= 2 and all(d is not None for d in dims):
+                if dims[-1] % LANE_MULTIPLE != 0:
+                    yield self.finding(
+                        ctx, node,
+                        f"BlockSpec last dim {dims[-1]} is not a multiple "
+                        f"of the {LANE_MULTIPLE}-lane tile — the block "
+                        "cannot map onto TPU vector registers")
+                elif dims[-2] % SUBLANE_MULTIPLE != 0:
+                    yield self.finding(
+                        ctx, node,
+                        f"BlockSpec sublane dim {dims[-2]} is not a "
+                        f"multiple of {SUBLANE_MULTIPLE} (f32 tile is "
+                        f"{SUBLANE_MULTIPLE}x{LANE_MULTIPLE})")
+                else:
+                    bytes_ = 4
+                    for d in dims:
+                        bytes_ *= d
+                    per_call_vmem.append((node, bytes_))
+        if per_call_vmem:
+            total = sum(b for _, b in per_call_vmem)
+            # double-buffered pipelining: each block is resident twice
+            if 2 * total > VMEM_BUDGET_BYTES:
+                yield self.finding(
+                    ctx, per_call_vmem[0][0],
+                    f"VMEM block footprint ~{2 * total} B (double-"
+                    f"buffered) exceeds the {VMEM_BUDGET_BYTES} B per-core "
+                    "budget — shrink the block rows")
+
+    # -- SMEM record-list budget constants --------------------------------
+
+    def _check_smem_budget_consts(self, ctx: FileContext
+                                  ) -> Iterable[Finding]:
+        """Any module-level *_SMEM_RECORDS constant must fit the SMEM
+        budget at 8 B/record (seed u32 + coeff f32), the zo_replay wire
+        format."""
+        for stmt in getattr(ctx.tree, "body", []):
+            if not (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)):
+                continue
+            name = stmt.targets[0].id
+            if not name.endswith("_SMEM_RECORDS"):
+                continue
+            val = astutil.const_int(stmt.value, ctx.consts)
+            if val is not None and val * 8 > SMEM_BUDGET_BYTES:
+                yield self.finding(
+                    ctx, stmt,
+                    f"{name} = {val} records x 8 B = {val * 8} B exceeds "
+                    f"the {SMEM_BUDGET_BYTES} B SMEM budget — the kernel "
+                    "will fail at lowering on real cores")
+
+    # -- raw kernel calls outside the budget-enforcing layer --------------
+
+    def _check_raw_kernel_calls(self, ctx: FileContext) -> Iterable[Finding]:
+        if _BUDGET_LAYER in ctx.path.replace("\\", "/"):
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = astutil.call_name(node, ctx.aliases)
+            if name in _RAW_KERNELS:
+                yield self.finding(
+                    ctx, node,
+                    f"{name.split('.')[-1]} called outside kernels/ — the "
+                    "raw kernel has no record chunking, so lists past "
+                    "REPLAY_SMEM_RECORDS fail at lowering; call "
+                    "ops.zo_replay_leaf / ops.zo_update_leaf instead")
+
+    # -- PartitionSpec axis names -----------------------------------------
+
+    def _check_pspecs(self, ctx: FileContext) -> Iterable[Finding]:
+        pspec_locals = {local for local, full in ctx.aliases.items()
+                        if full in _PSPEC_NAMES}
+        if not pspec_locals:
+            return
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in pspec_locals):
+                continue
+            axes: List[str] = []
+            for arg in node.args:
+                elts = (arg.elts if isinstance(arg, (ast.Tuple, ast.List))
+                        else [arg])
+                for e in elts:
+                    if isinstance(e, ast.Constant) \
+                            and isinstance(e.value, str):
+                        axes.append(e.value)
+            for ax in axes:
+                if ax not in MESH_AXES:
+                    yield self.finding(
+                        ctx, node,
+                        f"PartitionSpec axis '{ax}' is not a declared mesh "
+                        f"axis {sorted(MESH_AXES)} — pjit will reject it "
+                        "at placement time")

@@ -1,0 +1,209 @@
+"""RNG rules: numpy/stdlib RNG discipline and JAX PRNG key reuse.
+
+Everything bit-exact in this repo — scan == python, sparse == dense,
+subset staging == fleet gather, checkpoint resume — reduces to RNG draws
+happening in a pinned order from pinned keys. These rules reject the two
+ways that discipline silently erodes: ambient RNG state (global numpy /
+stdlib ``random``; unseeded generators) and a JAX key consumed twice.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis import astutil
+from repro.analysis.core import FileContext, Finding, Rule
+
+# numpy.random attributes that are NOT legacy global-state samplers
+_NP_RANDOM_OK = {
+    "default_rng", "Generator", "SeedSequence", "BitGenerator", "PCG64",
+    "PCG64DXSM", "Philox", "SFC64", "MT19937", "RandomState",
+}
+
+_STDLIB_RANDOM_OK = {"Random", "SystemRandom"}
+
+# jax.random callables that *derive* keys rather than consuming them
+_KEY_DERIVERS = {"split", "fold_in", "PRNGKey", "key", "wrap_key_data",
+                 "clone", "key_data"}
+_NOT_SAMPLERS = _KEY_DERIVERS | {"key_impl", "default_prng_impl"}
+
+
+def _mentions_seed(node: ast.AST) -> bool:
+    """Does the expression reference a seed-named thing (``seed``,
+    ``self.seed``, ``cfg.data_seed``...) anywhere?"""
+    for n in ast.walk(node):
+        name = None
+        if isinstance(n, ast.Name):
+            name = n.id
+        elif isinstance(n, ast.Attribute):
+            name = n.attr
+        elif isinstance(n, ast.arg):
+            name = n.arg
+        if name is not None and "seed" in name.lower():
+            return True
+    return False
+
+
+class RngDiscipline(Rule):
+    id = "rng-discipline"
+    doc = ("No ambient RNG state: numpy legacy global samplers "
+           "(np.random.rand/seed/...) and stdlib random are banned; "
+           "np.random.default_rng() must be seeded, and tuple seeds must "
+           "lead with the run seed — the (seed, stream_tag, ...) keying "
+           "convention of straggler.py / loader.py / synthetic.py.")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = astutil.call_name(node, ctx.aliases)
+            if name is None:
+                continue
+            if name.startswith("numpy.random."):
+                attr = name.split(".", 2)[2]
+                if attr.split(".")[0] not in _NP_RANDOM_OK:
+                    yield self.finding(
+                        ctx, node,
+                        f"np.random.{attr} draws from the process-global "
+                        "numpy RNG — schedules/batches stop being a pure "
+                        "function of (seed, ...); use np.random.default_rng"
+                        "((seed, stream_tag, ...)) instead")
+                elif attr == "default_rng":
+                    yield from self._check_default_rng(ctx, node)
+            elif name.startswith("random.") and name.count(".") == 1:
+                attr = name.split(".")[1]
+                if attr not in _STDLIB_RANDOM_OK:
+                    yield self.finding(
+                        ctx, node,
+                        f"stdlib random.{attr} uses hidden global state — "
+                        "resume/equivalence gates cannot pin it; use a "
+                        "seeded np.random.default_rng stream")
+
+    def _check_default_rng(self, ctx: FileContext,
+                           node: ast.Call) -> Iterable[Finding]:
+        if not node.args and not node.keywords:
+            yield self.finding(
+                ctx, node,
+                "np.random.default_rng() without a seed is entropy-seeded "
+                "— every draw is unreproducible; key it as "
+                "(seed, stream_tag, ...)")
+            return
+        arg = node.args[0] if node.args else node.keywords[0].value
+        if isinstance(arg, (ast.Tuple, ast.List)):
+            if not arg.elts:
+                return
+            if not _mentions_seed(arg.elts[0]):
+                yield self.finding(
+                    ctx, node,
+                    "seed tuple does not lead with the run seed: the repo "
+                    "keys streams as (seed, stream_tag, ...) so distinct "
+                    "consumers stay decorrelated per run seed",
+                    severity="warning")
+        elif isinstance(arg, ast.Constant) and not _mentions_seed(node):
+            yield self.finding(
+                ctx, node,
+                "hard-coded RNG seed: thread the run seed through instead "
+                "(key streams as (seed, stream_tag, ...))",
+                severity="warning")
+
+
+class JaxKeyReuse(Rule):
+    id = "jax-key-reuse"
+    doc = ("A jax.random key passed to two sampling calls without an "
+           "intervening split/fold_in yields correlated draws — flag the "
+           "second consumption, and any consumption inside a loop of a "
+           "key derived outside it.")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        scopes: List[ast.AST] = [ctx.tree]
+        scopes.extend(n for n in ast.walk(ctx.tree)
+                      if isinstance(n, astutil.SCOPE_NODES))
+        for scope in scopes:
+            yield from self._check_scope(ctx, scope)
+
+    # -- helpers ----------------------------------------------------------
+
+    def _jax_random_attr(self, ctx: FileContext,
+                         call: ast.Call) -> Optional[str]:
+        name = astutil.call_name(call, ctx.aliases)
+        if name and name.startswith("jax.random."):
+            return name.split(".", 2)[2]
+        return None
+
+    def _check_scope(self, ctx: FileContext,
+                     scope: ast.AST) -> Iterable[Finding]:
+        # pass 1: key variables = names ever assigned from PRNGKey/split/
+        # fold_in (or rebound from them in tuple unpacks)
+        nodes = astutil.scope_nodes_ordered(scope)
+        keys: Set[str] = set()
+        if isinstance(scope, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for a in scope.args.args + scope.args.kwonlyargs:
+                if a.arg == "key" or a.arg.endswith("_key"):
+                    keys.add(a.arg)
+        for n in nodes:
+            if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call):
+                attr = self._jax_random_attr(ctx, n.value)
+                if attr in _KEY_DERIVERS:
+                    for t in n.targets:
+                        keys.update(astutil.assigned_names(t))
+        if not keys:
+            return
+
+        def loop_depth(n: ast.AST) -> int:
+            d = 0
+            for anc in astutil.ancestors(n):
+                if anc is scope or isinstance(anc, astutil.SCOPE_NODES):
+                    break
+                if isinstance(anc, astutil.LOOP_NODES):
+                    d += 1
+            return d
+
+        # key names re-derived somewhere inside a loop advance their stream
+        # per iteration — consuming them in that loop is the sanctioned
+        # `key, sub = split(key)` idiom, whichever line order it uses
+        refreshed_in_loop: Set[str] = set()
+        for n in nodes:
+            if isinstance(n, ast.Assign) and loop_depth(n) > 0:
+                for t in n.targets:
+                    refreshed_in_loop.update(
+                        nm for nm in astutil.assigned_names(t) if nm in keys)
+            elif isinstance(n, (ast.For, ast.AsyncFor)):
+                refreshed_in_loop.update(
+                    nm for nm in astutil.assigned_names(n.target)
+                    if nm in keys)
+
+        # pass 2: walk statements in order; track, per key name, the last
+        # consuming call (absent = fresh)
+        consumed: Dict[str, ast.Call] = {}
+        for n in nodes:
+            if isinstance(n, ast.Assign):
+                for t in n.targets:
+                    for nm in astutil.assigned_names(t):
+                        if nm in keys:
+                            consumed.pop(nm, None)
+            elif isinstance(n, (ast.For, ast.AsyncFor)):
+                for nm in astutil.assigned_names(n.target):
+                    if nm in keys:
+                        consumed.pop(nm, None)
+            elif isinstance(n, ast.Call):
+                attr = self._jax_random_attr(ctx, n)
+                if attr is None or attr in _NOT_SAMPLERS or not n.args:
+                    continue
+                k0 = n.args[0]
+                if not isinstance(k0, ast.Name) or k0.id not in keys:
+                    continue
+                nm = k0.id
+                prev = consumed.get(nm)
+                if prev is not None:
+                    yield self.finding(
+                        ctx, n,
+                        f"key '{nm}' already consumed by jax.random call on "
+                        f"line {prev.lineno} — split/fold_in before sampling "
+                        "again (identical keys give identical draws)")
+                elif loop_depth(n) > 0 and nm not in refreshed_in_loop:
+                    yield self.finding(
+                        ctx, n,
+                        f"key '{nm}' derived outside this loop is consumed "
+                        "inside it — every iteration samples the same "
+                        "stream; fold_in the loop index first")
+                consumed[nm] = n

@@ -62,16 +62,18 @@ def main(argv=None):
 
     cfg = get_config(args.arch, smoke=args.smoke)
     key = jax.random.PRNGKey(args.seed)
-    params = init_params(cfg, key)
-    batch = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len),
+    k_params, k_tok, k_img, k_audio = jax.random.split(key, 4)
+    params = init_params(cfg, k_params)
+    batch = {"tokens": jax.random.randint(k_tok,
+                                          (args.batch, args.prompt_len),
                                           0, cfg.vocab_size)}
     if cfg.n_image_tokens:
         batch["image_embeds"] = jax.random.normal(
-            key, (args.batch, cfg.n_image_tokens, cfg.d_model),
+            k_img, (args.batch, cfg.n_image_tokens, cfg.d_model),
             jnp.dtype(cfg.dtype))
     if cfg.is_encoder_decoder:
         batch["frames"] = jax.random.normal(
-            key, (args.batch, cfg.n_audio_frames, cfg.d_model),
+            k_audio, (args.batch, cfg.n_audio_frames, cfg.d_model),
             jnp.dtype(cfg.dtype))
     t0 = time.time()
     toks = generate(cfg, params, batch, args.prompt_len, args.gen)

@@ -109,7 +109,8 @@ def gqa_attention(cfg: ModelConfig, p, x, positions, *, causal: bool = True):
     scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
     scores = jnp.einsum("bkgsd,bktd->bkgst", q, k,
                         preferred_element_type=jnp.float32) * scale
-    scores = scores + _mask(S, S, causal, cfg.sliding_window)
+    scores = scores + _mask(S, S, causal, cfg.sliding_window)[None, None,
+                                                             None]
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out = jnp.einsum("bkgst,bktd->bskgd", probs, v).reshape(B, S, H * dh)
     return out @ p["wo"]

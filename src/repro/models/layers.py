@@ -86,6 +86,9 @@ def apply_rope(x, positions, theta: float, d_rot: int | None = None):
     if d_rot is None:
         d_rot = d_head
     inv = rope_freqs(d_rot, theta)                                  # (d_rot/2,)
+    # explicit rank alignment: (..., S, 1) x (1, ..., 1, d_rot/2) — keeps
+    # the op legal under jax_numpy_rank_promotion='raise'
+    inv = inv.reshape((1,) * positions.ndim + (-1,))
     ang = positions[..., None].astype(jnp.float32) * inv            # (..., S, d_rot/2)
     cos, sin = jnp.cos(ang), jnp.sin(ang)
     xr, xp = x[..., :d_rot], x[..., d_rot:]

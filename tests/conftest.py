@@ -13,6 +13,44 @@ def key():
     return jax.random.PRNGKey(0)
 
 
+@pytest.fixture
+def jax_sanitizers(monkeypatch):
+    """Runtime backstop for repro.analysis's host-sync rule (opt in with
+    ``pytestmark = pytest.mark.usefixtures("jax_sanitizers")``).
+
+    Two sanitizers for the duration of the test:
+
+    * ``jax_numpy_rank_promotion="raise"`` — implicit rank promotion in
+      any jnp op becomes an error instead of a silent broadcast;
+    * every executable minted by the engine's ``_cached_jit`` registry
+      dispatches under ``jax.transfer_guard("disallow")`` — an argument
+      reaching the jit boundary that is not already device-committed
+      (stray numpy row, python scalar) trips an implicit host-to-device
+      transfer error. Host staging around the call (jnp.asarray uploads,
+      the per-chunk np.asarray flush) is explicit and stays legal, so
+      this pins exactly the invariant: no *implicit* transfers inside
+      the engine's scan/stream loop.
+    """
+    from repro.core import engine as _engine
+    orig_cached_jit = _engine._cached_jit
+
+    def guarded_cached_jit(algo, mode, cfg, sfl, build):
+        fn = orig_cached_jit(algo, mode, cfg, sfl, build)
+
+        def dispatch(*args, **kwargs):
+            with jax.transfer_guard("disallow"):
+                return fn(*args, **kwargs)
+        return dispatch
+
+    monkeypatch.setattr(_engine, "_cached_jit", guarded_cached_jit)
+    old = jax.config.jax_numpy_rank_promotion or "allow"
+    jax.config.update("jax_numpy_rank_promotion", "raise")
+    try:
+        yield
+    finally:
+        jax.config.update("jax_numpy_rank_promotion", old)
+
+
 def tiny_lm_cfg(**kw):
     """A minimal dense config for algorithm tests (fast compiles)."""
     from repro.configs import get_config

@@ -1,0 +1,345 @@
+"""Golden tests for repro.analysis: per rule one positive snippet (must
+flag) and one negative snippet (must stay silent), plus suppression
+(`# lint: ignore[rule-id]`), baseline semantics, and the CLI exit-code
+contract the CI `analysis` job relies on."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (analyze_paths, analyze_source, check_clean,
+                            default_rules, load_baseline, save_baseline,
+                            split_new)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def rules_hit(src, path="snippet.py"):
+    return sorted({f.rule for f in analyze_source(src, path)})
+
+
+# ---------------------------------------------------------------------------
+# rule goldens: (rule id, positive snippet, negative snippet)
+# ---------------------------------------------------------------------------
+
+GOLDENS = [
+    (
+        "rng-discipline",
+        # positive: global numpy RNG state
+        "import numpy as np\n"
+        "def draw(n):\n"
+        "    return np.random.rand(n)\n",
+        # negative: the repo's (seed, stream_tag, ...) keying convention
+        "import numpy as np\n"
+        "def draw(seed, round_idx, client):\n"
+        "    rng = np.random.default_rng((seed, round_idx, client))\n"
+        "    return rng.random(4)\n",
+    ),
+    (
+        "rng-discipline",
+        # positive: unseeded generator
+        "import numpy as np\nrng = np.random.default_rng()\n",
+        # negative: seeded scalar
+        "import numpy as np\n"
+        "def f(seed):\n    return np.random.default_rng(seed)\n",
+    ),
+    (
+        "rng-discipline",
+        # positive: stdlib random global state
+        "import random\n"
+        "def pick(xs):\n    return random.choice(xs)\n",
+        # negative: stdlib allowed for an explicitly constructed instance
+        "import random\n"
+        "def pick(xs, seed):\n    return random.Random(seed).choice(xs)\n",
+    ),
+    (
+        "jax-key-reuse",
+        # positive: key consumed twice with no split
+        "import jax\n"
+        "def f(key):\n"
+        "    a = jax.random.normal(key, (2,))\n"
+        "    b = jax.random.uniform(key, (2,))\n"
+        "    return a + b\n",
+        # negative: split before the second consumption
+        "import jax\n"
+        "def f(key):\n"
+        "    k1, k2 = jax.random.split(key)\n"
+        "    a = jax.random.normal(k1, (2,))\n"
+        "    b = jax.random.uniform(k2, (2,))\n"
+        "    return a + b\n",
+    ),
+    (
+        "jax-key-reuse",
+        # positive: loop consumes a key derived outside it
+        "import jax\n"
+        "def f(key, n):\n"
+        "    out = []\n"
+        "    for i in range(n):\n"
+        "        out.append(jax.random.normal(key, (2,)))\n"
+        "    return out\n",
+        # negative: per-iteration fold_in (the engine's fold_in_keys idiom)
+        "import jax\n"
+        "def f(key, n):\n"
+        "    out = []\n"
+        "    for i in range(n):\n"
+        "        k = jax.random.fold_in(key, i)\n"
+        "        out.append(jax.random.normal(k, (2,)))\n"
+        "    return out\n",
+    ),
+    (
+        "trace-leak",
+        # positive: fresh jax.jit per call (PR 4's trace-count bug)
+        "import jax\n"
+        "def step(params, batch):\n"
+        "    fn = jax.jit(lambda p, b: p)\n"
+        "    return fn(params, batch)\n",
+        # negative: routed through the _cached_jit registry
+        "import jax\n"
+        "from repro.core.engine import _cached_jit\n"
+        "def step(algo, cfg, sfl, params, batch):\n"
+        "    fn = _cached_jit(algo, 'scan', cfg, sfl,\n"
+        "                     lambda: jax.jit(lambda p, b: p))\n"
+        "    return fn(params, batch)\n",
+    ),
+    (
+        "trace-leak",
+        # positive: jit under a non-caching decorator
+        "import jax\n"
+        "def make(cfg):\n"
+        "    return jax.jit(lambda x: x * cfg)\n",
+        # negative: module-level registry store (decode_step_jit pattern)
+        "import jax\n"
+        "_REG = {}\n"
+        "def make(cfg):\n"
+        "    fn = _REG.get(cfg)\n"
+        "    if fn is None:\n"
+        "        fn = jax.jit(lambda x: x * cfg)\n"
+        "        _REG[cfg] = fn\n"
+        "    return fn\n",
+    ),
+    (
+        "host-sync",
+        # positive: float() on a jit output every loop iteration
+        "def run(chunk_jit, xs):\n"
+        "    tot = 0.0\n"
+        "    for x in xs:\n"
+        "        params, mets = chunk_jit(x, x)\n"
+        "        tot += float(mets)\n"
+        "    return tot\n",
+        # negative: sync once at the chunk boundary, after the loop
+        "import numpy as np\n"
+        "def run(chunk_jit, xs):\n"
+        "    mets = None\n"
+        "    for x in xs:\n"
+        "        params, mets = chunk_jit(x, x)\n"
+        "    return np.asarray(mets)\n",
+    ),
+    (
+        "donation-safety",
+        # positive: donated buffer read after the call
+        "import jax\n"
+        "step = jax.jit(lambda p, b: p, donate_argnums=(0,))\n"
+        "def run(params, batch):\n"
+        "    out = step(params, batch)\n"
+        "    return params\n",
+        # negative: donated arg rebound by the call (the engine idiom)
+        "import jax\n"
+        "step = jax.jit(lambda p, b: p, donate_argnums=(0,))\n"
+        "def run(params, batch):\n"
+        "    params = step(params, batch)\n"
+        "    return params\n",
+    ),
+    (
+        "pallas-budget",
+        # positive: BlockSpec last dim off the 128-lane grid
+        "from jax.experimental import pallas as pl\n"
+        "SPEC = pl.BlockSpec((8, 100), lambda i: (i, 0))\n",
+        # negative: aligned block
+        "from jax.experimental import pallas as pl\n"
+        "SPEC = pl.BlockSpec((8, 128), lambda i: (i, 0))\n",
+    ),
+    (
+        "pallas-budget",
+        # positive: record-list constant past the SMEM budget
+        "REPLAY_SMEM_RECORDS = 1 << 20\n",
+        # negative: the shipped 2048-record budget (16 KiB)
+        "REPLAY_SMEM_RECORDS = 2048\n",
+    ),
+    (
+        "pallas-budget",
+        # positive: PartitionSpec axis not on any declared mesh
+        "from jax.sharding import PartitionSpec as P\n"
+        "SPEC = P('batch', None)\n",
+        # negative: declared axes only
+        "from jax.sharding import PartitionSpec as P\n"
+        "SPEC = P(('pod', 'data'), 'model')\n",
+    ),
+    (
+        "pallas-budget",
+        # positive: raw kernel call outside the budget-enforcing layer
+        "from repro.kernels.zo_update import zo_replay_flat\n"
+        "def apply(x, seeds, coeffs):\n"
+        "    return zo_replay_flat(x, seeds, coeffs)\n",
+        # negative: the ops-layer wrapper that chunks records
+        "from repro.kernels.ops import zo_replay_leaf\n"
+        "def apply(x, seeds, coeffs):\n"
+        "    return zo_replay_leaf(x, seeds, coeffs)\n",
+    ),
+]
+
+
+@pytest.mark.parametrize(
+    "rule,positive,negative", GOLDENS,
+    ids=[f"{r}-{i}" for i, (r, _, _) in enumerate(GOLDENS)])
+def test_rule_golden(rule, positive, negative):
+    assert rule in rules_hit(positive), \
+        f"{rule} must flag its positive snippet"
+    assert rule not in rules_hit(negative), \
+        f"{rule} must not flag its negative snippet"
+
+
+def test_all_six_rules_covered():
+    """Every registered rule has at least one golden pair above."""
+    covered = {r for r, _, _ in GOLDENS}
+    assert covered == {r.id for r in default_rules()}
+
+
+# ---------------------------------------------------------------------------
+# suppression + baseline semantics
+# ---------------------------------------------------------------------------
+
+def test_inline_ignore_same_line():
+    src = ("import numpy as np\n"
+           "x = np.random.rand(3)  # lint: ignore[rng-discipline]\n")
+    assert analyze_source(src) == []
+
+
+def test_inline_ignore_line_above_comment_only():
+    src = ("import numpy as np\n"
+           "# lint: ignore[rng-discipline]\n"
+           "x = np.random.rand(3)\n")
+    assert analyze_source(src) == []
+
+
+def test_inline_ignore_wrong_rule_does_not_suppress():
+    src = ("import numpy as np\n"
+           "x = np.random.rand(3)  # lint: ignore[host-sync]\n")
+    assert [f.rule for f in analyze_source(src)] == ["rng-discipline"]
+
+
+def test_inline_ignore_bare_suppresses_all():
+    src = ("import numpy as np\n"
+           "x = np.random.rand(3)  # lint: ignore\n")
+    assert analyze_source(src) == []
+
+
+def test_ignore_on_code_line_above_does_not_suppress():
+    """The line-above form only counts for comment-only lines."""
+    src = ("import numpy as np  # lint: ignore[rng-discipline]\n"
+           "x = np.random.rand(3)\n")
+    assert [f.rule for f in analyze_source(src)] == ["rng-discipline"]
+
+
+def test_baseline_split(tmp_path):
+    src = ("import numpy as np\n"
+           "a = np.random.rand(3)\n"
+           "b = np.random.rand(4)\n")
+    findings = analyze_source(src, "m.py")
+    assert len(findings) == 2
+    bl = tmp_path / "baseline.json"
+    save_baseline(str(bl), findings[:1])
+    new, old = split_new(findings, load_baseline(str(bl)))
+    assert len(old) == 1 and len(new) == 1
+    assert new[0].line == 3               # the unbaselined second hit
+
+
+def test_baseline_is_multiset(tmp_path):
+    """One baseline entry absorbs exactly one identical finding."""
+    src = ("import numpy as np\n"
+           "a = np.random.rand(3)\n"
+           "a = np.random.rand(3)\n")       # same stripped code text
+    f2 = analyze_source(src, "m.py")
+    assert f2[0].key() == f2[1].key()
+    bl = tmp_path / "baseline.json"
+    save_baseline(str(bl), f2[:1])
+    new, old = split_new(f2, load_baseline(str(bl)))
+    assert len(old) == 1 and len(new) == 1
+
+
+def test_baseline_missing_file_means_empty():
+    assert load_baseline("/nonexistent/baseline.json") == []
+
+
+# ---------------------------------------------------------------------------
+# tree + CLI contract
+# ---------------------------------------------------------------------------
+
+def test_shipped_tree_is_clean():
+    """The acceptance gate: src/ has no findings beyond the committed
+    baseline."""
+    new, _ = check_clean([os.path.join(REPO, "src")],
+                         os.path.join(REPO, "analysis", "baseline.json"))
+    # baseline paths are repo-relative; re-split against relative paths
+    findings = analyze_paths(["src"]) if os.getcwd() == REPO else None
+    if findings is not None:
+        new, _ = split_new(findings,
+                           load_baseline("analysis/baseline.json"))
+    assert new == [], "\n".join(f.render() for f in new)
+
+
+def _run_cli(args, cwd):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=cwd, capture_output=True, text=True,
+        env={**os.environ,
+             "PYTHONPATH": os.path.join(REPO, "src")})
+
+
+@pytest.mark.slow
+def test_cli_exit_codes(tmp_path):
+    clean = tmp_path / "clean.py"
+    clean.write_text("import numpy as np\n"
+                     "def f(seed):\n"
+                     "    return np.random.default_rng((seed, 1))\n")
+    dirty = tmp_path / "dirty.py"
+    dirty.write_text("import numpy as np\nx = np.random.rand(3)\n")
+
+    r = _run_cli([str(clean)], cwd=str(tmp_path))
+    assert r.returncode == 0, r.stdout + r.stderr
+    r = _run_cli([str(dirty)], cwd=str(tmp_path))
+    assert r.returncode == 1 and "rng-discipline" in r.stdout
+
+    # --update-baseline accepts the finding; the rerun then exits 0
+    r = _run_cli([str(dirty), "--update-baseline",
+                  "--baseline", str(tmp_path / "bl.json")],
+                 cwd=str(tmp_path))
+    assert r.returncode == 0
+    r = _run_cli([str(dirty), "--baseline", str(tmp_path / "bl.json")],
+                 cwd=str(tmp_path))
+    assert r.returncode == 0, r.stdout
+
+    # --report writes the findings JSON artifact (the CI upload)
+    rep = tmp_path / "report.json"
+    r = _run_cli([str(dirty), "--baseline", str(tmp_path / "bl.json"),
+                  "--report", str(rep)], cwd=str(tmp_path))
+    data = json.loads(rep.read_text())
+    assert data["new"] == [] and len(data["baselined"]) == 1
+
+
+def test_parse_error_is_a_finding(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f(:\n")
+    fs = analyze_paths([str(bad)])
+    assert [f.rule for f in fs] == ["parse-error"]
+
+
+def test_seeded_violation_per_rule_trips_tree_scan(tmp_path):
+    """End-to-end: dropping any single-rule violation into a scanned tree
+    makes the analyzer report exactly that rule as new."""
+    for rule, positive, _ in GOLDENS:
+        mod = tmp_path / "seeded.py"
+        mod.write_text(positive)
+        findings = analyze_paths([str(tmp_path)])
+        assert rule in {f.rule for f in findings}, rule

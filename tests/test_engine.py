@@ -20,6 +20,11 @@ from repro.models import init_params, untie_params
 M = 4
 ROUNDS = 8
 
+# every test here runs under the runtime sanitizers: rank-promotion
+# errors + transfer_guard('disallow') around each jit'd engine dispatch
+# (the dynamic backstop for repro.analysis's host-sync rule)
+pytestmark = pytest.mark.usefixtures("jax_sanitizers")
+
 
 @pytest.fixture(scope="module")
 def setup():

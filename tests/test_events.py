@@ -21,6 +21,10 @@ from repro.models import init_params, untie_params
 M = 4
 ROUNDS = 8
 
+# runtime sanitizers on the whole module: rank-promotion errors + the
+# transfer guard around jit'd engine dispatches (see conftest)
+pytestmark = pytest.mark.usefixtures("jax_sanitizers")
+
 
 @pytest.fixture(scope="module")
 def setup():
