@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +27,7 @@ import numpy as np
 
 from repro.core import zo
 from repro.launch.hlo_analysis import analyze_compiled
+from repro.obs import measure
 
 
 def make_tree(d: int, key):
@@ -39,13 +39,17 @@ def make_tree(d: int, key):
 
 
 def timed(fn, *args, reps=3):
-    out = fn(*args)
-    jax.block_until_ready(out)                  # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e3  # ms
+    """(ms_per_rep, host_peak_bytes) via the shared obs.measure helper —
+    same (seconds, peak_bytes) pair every benchmark row records."""
+    jax.block_until_ready(fn(*args))            # compile
+
+    def body():
+        for _ in range(reps):
+            out = fn(*args)
+        return jax.block_until_ready(out)
+
+    m = measure(body)
+    return m.seconds / reps * 1e3, m.peak_bytes
 
 
 def main(argv=None):
@@ -81,9 +85,10 @@ def main(argv=None):
     for name, fn, sweeps in (("scan_v3", scan_fn, args.n),
                              ("fused_v4", fused_fn, 1)):
         hlo = analyze_compiled(fn.lower(params, keys, coeffs).compile())
+        ms, peak = timed(fn, params, keys, coeffs, reps=args.reps)
         rows[name] = {
-            "wall_ms": round(timed(fn, params, keys, coeffs,
-                                   reps=args.reps), 3),
+            "wall_ms": round(ms, 3),
+            "host_peak_mb": round(peak / 2**20, 3),
             "analytic_hbm_bytes_per_record": sweep_bytes * sweeps / args.n,
             "hlo_hbm_bytes_per_record": hlo["expanded_hbm_bytes"] / args.n,
         }

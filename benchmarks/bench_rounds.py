@@ -16,7 +16,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 
 import jax
 import numpy as np
@@ -25,15 +24,19 @@ from benchmarks.common import batch_fn_for, make_setup
 from repro.configs import SFLConfig
 from repro.core import engine
 from repro.core import straggler as strag
+from repro.obs import measure
 
 
 def run_once(algo, cfg, sfl, params, batch_fn, sched, key, *, rounds, mode,
              chunk):
-    t0 = time.perf_counter()
-    res = engine.run_rounds(algo, cfg, sfl, params, batch_fn, sched, key,
-                            rounds=rounds, mode=mode, chunk_size=chunk)
-    jax.block_until_ready(res.params)
-    return res, time.perf_counter() - t0
+    """(result, seconds, host_peak_bytes) — the shared obs.measure pair."""
+    def body():
+        res = engine.run_rounds(algo, cfg, sfl, params, batch_fn, sched, key,
+                                rounds=rounds, mode=mode, chunk_size=chunk)
+        jax.block_until_ready(res.params)
+        return res
+    m = measure(body)
+    return m.result, m.seconds, m.peak_bytes
 
 
 def run(rounds=32, chunk=8, M=4, tau=2, algorithm="mu_splitfed", seed=0,
@@ -60,12 +63,14 @@ def run(rounds=32, chunk=8, M=4, tau=2, algorithm="mu_splitfed", seed=0,
         # the usual guard against shared-machine noise)
         run_once(algo, cfg, sfl, params, batch_fn, sched, key,
                  rounds=rounds, mode=mode, chunk=chunk)
-        best = None
+        best, best_peak = None, 0
         for _ in range(reps):
-            res, dt = run_once(algo, cfg, sfl, params, batch_fn, sched, key,
-                               rounds=rounds, mode=mode, chunk=chunk)
-            best = dt if best is None else min(best, dt)
-        out[mode] = {"res": res, "total_s": best,
+            res, dt, peak = run_once(algo, cfg, sfl, params, batch_fn,
+                                     sched, key, rounds=rounds, mode=mode,
+                                     chunk=chunk)
+            if best is None or dt < best:
+                best, best_peak = dt, peak
+        out[mode] = {"res": res, "total_s": best, "peak_bytes": best_peak,
                      "per_round_ms": best / rounds * 1e3}
 
     # equivalence gate: the fused scan must reproduce the python loop's
@@ -80,6 +85,8 @@ def run(rounds=32, chunk=8, M=4, tau=2, algorithm="mu_splitfed", seed=0,
         "chunk": chunk, "tau": tau, "clients": M,
         "per_round_ms_python": round(out["python"]["per_round_ms"], 3),
         "per_round_ms_scan": round(out["scan"]["per_round_ms"], 3),
+        "host_peak_mb_python": round(out["python"]["peak_bytes"] / 2**20, 3),
+        "host_peak_mb_scan": round(out["scan"]["peak_bytes"] / 2**20, 3),
         "speedup": round(out["python"]["per_round_ms"]
                          / out["scan"]["per_round_ms"], 3),
         "max_loss_traj_diff": diff,

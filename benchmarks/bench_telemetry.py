@@ -1,0 +1,139 @@
+"""Telemetry overhead gate: engine run with telemetry ON vs OFF on the
+sparse-timeline async path — the hot path the producers instrument.
+
+The ON arm is the full observability stack: a TelemetrySink attached to
+run_rounds (sim + measured producers, block_until_ready-bracketed
+dispatch) AND an enabled SpanTracer installed over the engine/DES spans.
+The OFF arm is the default: no sink, no tracer — zero clock reads on the
+chunk loop. Both arms share one algorithm instance, so the jitted chunk
+executables compile once and every timed rep measures steady-state
+dispatch only; arms alternate rep-by-rep and the gate compares
+best-of-``reps`` (the usual guards against shared-machine noise).
+
+The CI job fails the build when overhead exceeds the budget:
+
+    PYTHONPATH=src python -m benchmarks.bench_telemetry --gate \
+        --trace-out telemetry-trace.json
+
+``--trace-out`` writes the last ON rep's Chrome trace (chrome://tracing /
+perfetto) as the job artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+import repro.obs as obs
+from benchmarks.common import batch_fn_for, make_setup
+from repro.configs import SFLConfig
+from repro.core import engine
+from repro.core import straggler as strag
+from repro.core.population import ClientPopulation, Cohort, DelayModel
+
+BUDGET = 0.02          # telemetry-on may cost at most 2% wall time
+M, QUORUM, ROUNDS, CHUNK = 32, 8, 64, 8
+
+POP = ClientPopulation(cohorts=(
+    Cohort(name="fast", n=M - M // 4, delay=DelayModel(base=0.3, scale=0.3)),
+    Cohort(name="slow", n=M // 4, delay=DelayModel(base=4.0, scale=0.5)),
+))
+
+
+def setup(seed=0):
+    cfg, params, ds, parts, key = make_setup(M=M, seed=seed, seq=16,
+                                             layers=2)
+    sfl = SFLConfig(n_clients=M, tau=2, cut_units=1, lr_server=5e-3,
+                    lr_client=1e-3, lr_global=1.0, population=POP,
+                    quorum=QUORUM, staleness_discount=0.5,
+                    timeline="sparse")
+    sched = strag.make_schedule(seed, ROUNDS,
+                                population=strag.ClientPopulation.resolve(sfl),
+                                t_server=0.25, t_comm=0.05)
+    batch_fn = batch_fn_for(ds, parts, 1, seed)
+    # ONE shared instance: both arms reuse the same compiled chunk
+    # executables, so the comparison is pure host-side overhead
+    algo = engine.get_algorithm("async_mu_splitfed",
+                                aggregation="seed_replay")
+    return algo, cfg, sfl, params, batch_fn, sched, key
+
+
+def run(algo, cfg, sfl, params, batch_fn, sched, key, *, telemetry=None):
+    res = engine.run_rounds(algo, cfg, sfl, params, batch_fn, sched, key,
+                            rounds=ROUNDS, chunk_size=CHUNK, mode="async",
+                            telemetry=telemetry)
+    jax.block_until_ready(res.params)
+    return res
+
+
+def bench(reps=7, seed=0, trace_out=""):
+    args = setup(seed)
+    tracer = obs.SpanTracer()
+
+    def arm_off():
+        prev = obs.install(None)
+        try:
+            m = obs.measure(run, *args)
+        finally:
+            obs.install(prev)
+        return m.seconds
+
+    def arm_on():
+        sink = obs.TelemetrySink()
+        tracer.clear()
+        prev = obs.install(tracer)
+        try:
+            m = obs.measure(run, *args, telemetry=sink)
+        finally:
+            obs.install(prev)
+        assert sink.records("sim") and sink.records("measured"), \
+            "telemetry arm produced no records"
+        return m.seconds
+
+    # warm both arms: compiles the chunk executables and touches every
+    # code path once before anything is timed
+    arm_off()
+    arm_on()
+    off, on = [], []
+    for _ in range(reps):                       # alternate: drift hits both
+        off.append(arm_off())
+        on.append(arm_on())
+    if trace_out:
+        n = tracer.export_chrome(trace_out)
+        print(f"trace artifact: {n} spans -> {trace_out}")
+    best_off, best_on = min(off), min(on)
+    return {
+        "bench": "bench_telemetry", "mode": "async/sparse",
+        "clients": M, "quorum": QUORUM, "rounds": ROUNDS, "chunk": CHUNK,
+        "reps": reps,
+        "off_s": round(best_off, 4), "on_s": round(best_on, 4),
+        "overhead": round((best_on - best_off) / best_off, 4),
+        "budget": BUDGET,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=7)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--gate", action="store_true",
+                    help="exit 1 when overhead exceeds the 2%% budget")
+    ap.add_argument("--trace-out", default="",
+                    help="write the ON arm's Chrome trace here (CI artifact)")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+    row = bench(reps=args.reps, seed=args.seed, trace_out=args.trace_out)
+    print(json.dumps(row, indent=1))
+    if args.out:
+        json.dump(row, open(args.out, "w"), indent=1)
+    if args.gate and row["overhead"] > BUDGET:
+        raise SystemExit(
+            f"telemetry overhead {row['overhead']:.2%} exceeds the "
+            f"{BUDGET:.0%} budget (off {row['off_s']}s -> on "
+            f"{row['on_s']}s)")
+    return row
+
+
+if __name__ == "__main__":
+    main()

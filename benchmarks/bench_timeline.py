@@ -37,11 +37,8 @@ subset staging bit-equal to indexing the fleet-width gather.
 from __future__ import annotations
 
 import argparse
-import gc
 import json
 import os
-import time
-import tracemalloc
 
 import numpy as np
 
@@ -49,6 +46,7 @@ from repro.configs import SFLConfig
 from repro.core import events
 from repro.core import straggler as strag
 from repro.core.population import ClientPopulation, Cohort, DelayModel
+from repro.obs import measure
 
 T_SERVER = 0.25
 QUORUM = 64
@@ -96,16 +94,9 @@ def tiered(M: int) -> ClientPopulation:
     ))
 
 
-def _traced(fn):
-    """(result, seconds, peak_bytes) of fn() under tracemalloc."""
-    gc.collect()
-    tracemalloc.start()
-    t0 = time.perf_counter()
-    out = fn()
-    dt = time.perf_counter() - t0
-    _, peak = tracemalloc.get_traced_memory()
-    tracemalloc.stop()
-    return out, dt, peak
+# (result, seconds, peak_bytes) — the shared repro.obs.measure helper,
+# so every benchmark's perf rows record the pair identically
+_traced = measure
 
 
 def bench_one(M: int, versions: int = VERSIONS, seed: int = 0) -> dict:
@@ -141,9 +132,8 @@ def bench_one(M: int, versions: int = VERSIONS, seed: int = 0) -> dict:
     try:
         d_applied, d_sec, d_peak = _traced(dense)
     except SystemExit as e:                    # M >= DENSE_REFUSE_M
-        tracemalloc.stop()
-        row["dense"] = {"refused": str(e)}
-        return row
+        row["dense"] = {"refused": str(e)}    # measure() already stopped
+        return row                            # tracemalloc on the raise
     row["dense"] = {"sec": round(d_sec, 4),
                     "peak_mb": round(d_peak / 2**20, 3),
                     "versions_per_s": round(versions / d_sec, 2),

@@ -51,7 +51,8 @@ def run_mu_splitfed_result(cfg, params, ds, parts, key, *, M, tau, cut,
                            chunk_size=8, algorithm="mu_splitfed",
                            mode="scan", aggregation=None, quorum=0,
                            staleness_discount=1.0, timeline="dense",
-                           k_max=0, ring_capacity=0) -> engine.EngineResult:
+                           k_max=0, ring_capacity=0,
+                           telemetry=None) -> engine.EngineResult:
     """Full EngineResult for one MU-SplitFed-family run through the engine.
 
     The fleet resolves through the one ClientPopulation.resolve path: an
@@ -80,7 +81,7 @@ def run_mu_splitfed_result(cfg, params, ds, parts, key, *, M, tau, cut,
                              batch_fn_for(ds, parts, batch, seed), sched, key,
                              rounds=rounds, chunk_size=chunk_size,
                              mode=mode, controller=controller,
-                             aggregation=aggregation)
+                             aggregation=aggregation, telemetry=telemetry)
 
 
 def run_mu_splitfed(cfg, params, ds, parts, key, *, M, tau, cut, rounds,

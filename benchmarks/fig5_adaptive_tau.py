@@ -54,11 +54,13 @@ def _arm(cfg, params, ds, parts, key, *, tau, rounds, seed, controller=None):
         rounds=rounds, lr_server=LR_SERVER, lr_client=LR_CLIENT,
         lr_global=1.0, population=POPULATION, controller=controller,
         t_server=T_SERVER, seed=seed, chunk_size=4)
+    taus = (res.tau_per_round if res.tau_per_round is not None
+            else np.full(rounds, tau, np.int64))
     return {
         "loss": [float(x) for x in res.round_loss],
         "wall": [float(x) for x in np.cumsum(res.round_times)],
-        "tau_per_round": [int(t) for t in res.tau_per_round],
-        "server_steps": int(res.tau_per_round.sum()),
+        "tau_per_round": [int(t) for t in taus],
+        "server_steps": int(taus.sum()),
         "total_time": float(res.sim_time),
     }
 

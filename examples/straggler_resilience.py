@@ -75,14 +75,16 @@ for name, algo, mode, tau, controller, quorum in arms:
                                                           seed=0),
                             sched, key, rounds=ROUNDS, chunk_size=4,
                             mode=mode, controller=controller)
-    steps = int(res.tau_per_round.sum())
+    # tau_per_round is Optional on hand-built results; run_rounds fills it
+    taus = (res.tau_per_round if res.tau_per_round is not None
+            else np.full(ROUNDS, sfl.tau, np.int64))
+    steps = int(taus.sum())
     print(f"{name:18s} rounds {ROUNDS:3d}  server-steps {steps:4d}  "
           f"sim time {res.sim_time:6.1f}s  "
           f"steps/sim-s {steps / res.sim_time:5.2f}  "
           f"final loss {res.round_loss[-1]:.4f}")
     if controller is not None:
-        print(f"{'':18s} tau trajectory: "
-              f"{[int(t) for t in res.tau_per_round]}")
+        print(f"{'':18s} tau trajectory: {[int(t) for t in taus]}")
 print("\nEq.12: per-round time = max(t_straggler, tau*t_server) — the tau "
       "server steps ride inside the straggler wait for free, and the "
       "controller re-sizes tau as the straggler gap moves. The semi-async "

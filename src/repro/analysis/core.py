@@ -104,10 +104,11 @@ class FileContext:
 def default_rules() -> List[Rule]:
     from repro.analysis.rules_jit import (DonationSafety, HostSync,
                                           TraceLeak)
+    from repro.analysis.rules_obs import TelemetryPurity
     from repro.analysis.rules_pallas import PallasBudget
     from repro.analysis.rules_rng import JaxKeyReuse, RngDiscipline
     return [RngDiscipline(), JaxKeyReuse(), TraceLeak(), HostSync(),
-            DonationSafety(), PallasBudget()]
+            DonationSafety(), PallasBudget(), TelemetryPurity()]
 
 
 def iter_py_files(paths: Sequence[str]) -> List[str]:

@@ -1,0 +1,176 @@
+"""Telemetry-purity rule: observability must stay on the host side.
+
+The measured telemetry producer's whole contract (obs/telemetry.py) is
+that its clock reads bracket *dispatch*, never live inside it.  A
+``float()`` / ``.item()`` coercion inside a jit'd body forces a
+device->host sync at trace time (or, worse, silently bakes the traced
+value into the executable); a ``span()`` / ``perf_counter()`` /
+``time.time()`` probe inside a traced body runs ONCE at trace time and
+then never again — the "measurement" it records is compile-time, not
+run-time, and it stops firing entirely once the executable is cached.
+Either way the number is a lie and the jit boundary is compromised.
+
+This rule finds traced bodies — functions decorated with ``@jax.jit``
+(bare or via ``partial``), functions passed to ``jax.jit(f)`` /
+``lax.scan(body, ...)`` / ``lax.fori_loop`` / ``lax.while_loop`` in the
+same file, and jit'd lambdas — and flags host coercions and obs probes
+inside them.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from repro.analysis import astutil
+from repro.analysis.core import FileContext, Finding, Rule
+
+_JIT_NAMES = {"jax.jit", "jax.pmap", "jax.experimental.pjit.pjit"}
+# control-flow combinators whose body argument is traced exactly once
+_TRACED_BODY_ARGS = {
+    "jax.lax.scan": (0,),
+    "jax.lax.fori_loop": (2,),
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.cond": (1, 2),
+    "jax.lax.map": (0,),
+}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+
+# host-sync coercions (same vocabulary as rules_jit.HostSync, but here ANY
+# occurrence inside a traced body is wrong, looped or not)
+_COERCIONS = {"float", "int", "bool", "complex"}
+_NP_COERCIONS = {"numpy.asarray", "numpy.array", "numpy.float64",
+                 "numpy.float32", "numpy.int64"}
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+
+# obs probes and wall clocks: trace-time side effects, not measurements
+_PROBE_NAMES = {
+    "repro.obs.span", "repro.obs.trace.span",
+    "repro.obs.measure", "repro.obs.measure.measure",
+    "repro.obs.get_registry", "repro.obs.metrics.get_registry",
+    "time.perf_counter", "time.perf_counter_ns", "time.time",
+    "time.monotonic",
+}
+
+
+def _is_jit_call(ctx: FileContext, node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    name = astutil.call_name(node, ctx.aliases)
+    if name in _JIT_NAMES:
+        return True
+    # partial(jax.jit, static_argnums=...)(f) / @partial(jax.jit, ...)
+    if name in _PARTIAL_NAMES and node.args:
+        return astutil.resolve_name(node.args[0], ctx.aliases) in _JIT_NAMES
+    return False
+
+
+class TelemetryPurity(Rule):
+    id = "telemetry-purity"
+    doc = ("float()/.item() host-sync coercions and obs probes (span, "
+           "perf_counter, metrics) inside a jit/scan-traced body either "
+           "force a device sync at trace time or fire once at trace time "
+           "and never again — instrument at the dispatch boundary "
+           "(engine chunk loop), never inside the traced function.")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for body in self._traced_bodies(ctx):
+            yield from self._check_body(ctx, body)
+
+    # -- traced-body discovery ------------------------------------------
+
+    def _traced_bodies(self, ctx: FileContext) -> List[ast.AST]:
+        defs = {}                       # name -> FunctionDef (same file)
+        for n in ast.walk(ctx.tree):
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(n.name, n)
+
+        out: List[ast.AST] = []
+        seen: Set[int] = set()
+
+        def add(node: Optional[ast.AST]) -> None:
+            if node is None or id(node) in seen:
+                return
+            if isinstance(node, ast.Lambda):
+                seen.add(id(node))
+                out.append(node)
+            elif isinstance(node, ast.Name) and node.id in defs:
+                fn = defs[node.id]
+                if id(fn) not in seen:
+                    seen.add(id(fn))
+                    out.append(fn)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                seen.add(id(node))
+                out.append(node)
+
+        for n in ast.walk(ctx.tree):
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in n.decorator_list:
+                    if astutil.resolve_name(dec, ctx.aliases) in _JIT_NAMES \
+                            or _is_jit_call(ctx, dec):
+                        add(n)
+            if not isinstance(n, ast.Call):
+                continue
+            if _is_jit_call(ctx, n):
+                for a in n.args:
+                    add(a)              # jax.jit(f) / jax.jit(lambda ...)
+            name = astutil.call_name(n, ctx.aliases)
+            for i in _TRACED_BODY_ARGS.get(name or "", ()):
+                if i < len(n.args):
+                    add(n.args[i])
+        return out
+
+    # -- violations inside one traced body ------------------------------
+
+    def _check_body(self, ctx: FileContext,
+                    body: ast.AST) -> Iterable[Finding]:
+        for n in ast.walk(body):
+            if isinstance(n, ast.withitem):
+                call = n.context_expr
+                if isinstance(call, ast.Call) and self._probe(ctx, call):
+                    yield self.finding(
+                        ctx, call,
+                        f"obs probe '{self._probe(ctx, call)}' inside a "
+                        "traced body fires once at trace time, then never "
+                        "again — move it to the dispatch boundary")
+            if not isinstance(n, ast.Call):
+                continue
+            name = astutil.call_name(n, ctx.aliases)
+            probe = self._probe(ctx, n)
+            if probe and not isinstance(getattr(n, "parent", None),
+                                        ast.withitem):
+                yield self.finding(
+                    ctx, n,
+                    f"obs probe '{probe}' inside a traced body fires once "
+                    "at trace time, then never again — move it to the "
+                    "dispatch boundary")
+            elif name in _COERCIONS or name in _NP_COERCIONS:
+                if n.args:
+                    yield self.finding(
+                        ctx, n,
+                        f"{name}() inside a traced body forces a host "
+                        "sync at trace time and bakes the traced value "
+                        "into the executable — return the array and "
+                        "coerce at the chunk-boundary flush")
+            elif isinstance(n.func, ast.Attribute) \
+                    and n.func.attr in _SYNC_METHODS:
+                yield self.finding(
+                    ctx, n,
+                    f".{n.func.attr}() inside a traced body is a "
+                    "trace-time host sync — the engine's only sanctioned "
+                    "sync is the per-chunk flush outside jit")
+
+    def _probe(self, ctx: FileContext, call: ast.Call) -> Optional[str]:
+        name = astutil.call_name(call, ctx.aliases)
+        if name in _PROBE_NAMES:
+            return name
+        # repro.obs.span / repro.obs.trace.span via any import alias ends
+        # with obs.<probe>; also catch sink.emit / registry probes by attr
+        if name and (name.endswith(".span") and "obs" in name.split(".")):
+            return name
+        if isinstance(call.func, ast.Attribute) \
+                and call.func.attr in {"emit", "observe", "inc"} \
+                and isinstance(call.func.value, ast.Name) \
+                and call.func.value.id in {"telemetry", "sink", "tracer",
+                                           "registry", "metrics"}:
+            return f".{call.func.attr}()"
+        return None

@@ -51,6 +51,7 @@ that one skipped re-plan).
 from __future__ import annotations
 
 import dataclasses
+from time import perf_counter
 from typing import (Any, Callable, Dict, List, NamedTuple, Optional, Protocol,
                     Tuple, Union, runtime_checkable)
 
@@ -61,6 +62,8 @@ import numpy as np
 from repro.configs.base import ModelConfig, SFLConfig
 from repro.core import events
 from repro.core import straggler as strag
+from repro.obs.telemetry import RoundTelemetry, TelemetrySink
+from repro.obs.trace import span
 from repro.core.baselines import (fedavg_round, fedlora_round, gas_init_state,
                                   gas_round, vanilla_splitfed_round)
 from repro.core.splitfed import mu_splitfed_round
@@ -389,7 +392,12 @@ class SchedWindow(NamedTuple):
     τ·t_server server floor — deliberately not the commit-to-commit
     duration, which includes that floor and would self-reinforce a τ
     planner): under event-driven commits THAT is the gap adaptive τ
-    should fill with server steps, not the max active delay."""
+    should fill with server steps, not the max active delay.
+
+    ``telemetry`` carries the TelemetrySink records overlapping the window
+    when run_rounds was given a sink — BOTH producers ('sim' and
+    'measured'), so a controller chooses its clock (AdaptiveTau's
+    ``source=``) instead of being wired to the simulator."""
     start: int
     stop: int
     delays: np.ndarray   # (C, M) simulated client compute times
@@ -397,6 +405,7 @@ class SchedWindow(NamedTuple):
     t_server: float
     t_comm: float
     quorum_wait: Optional[np.ndarray] = None   # (C,) async quorum waits
+    telemetry: Tuple[RoundTelemetry, ...] = ()  # sink records for the window
 
 
 @runtime_checkable
@@ -428,13 +437,26 @@ class AdaptiveTau:
     η_s·τ is held at its initial value, so a τ change rescales η_s and
     the per-round server drift stays stable. ``trace`` records the
     (round_idx, τ) decisions for analysis (benchmarks/fig5_adaptive_tau).
+
+    ``source`` picks the clock the straggler gap is observed on:
+    'sim' (default) reads the schedule's simulated delays / quorum waits
+    from the window rows, the historical behaviour; 'measured' reads the
+    measured-clock RoundTelemetry records from ``window.telemetry``
+    (block_until_ready-bracketed per-round wall time) and falls back to
+    the sim rows when no measured records cover the window — e.g. the
+    first boundary, or a run without a sink.
     """
 
     def __init__(self, tau_max: int = 64, ema: float = 0.5,
-                 couple_lr: bool = True, quantize: bool = False):
+                 couple_lr: bool = True, quantize: bool = False,
+                 source: str = "sim"):
+        if source not in ("sim", "measured"):
+            raise ValueError(f"AdaptiveTau source must be 'sim'|'measured', "
+                             f"got {source!r}")
         self.tau_max = tau_max
         self.ema = ema
         self.couple_lr = couple_lr
+        self.source = source
         self.quantize = quantize      # snap τ to powers of two: bounds the
         self.t_hat: Optional[float] = None        # number of distinct jit
         self._eta_step: Optional[float] = None    # executables (η_s·τ cached
@@ -453,17 +475,25 @@ class AdaptiveTau:
         self.t_hat = d.get("t_hat")
         self._eta_step = d.get("eta_step")
 
-    def update(self, round_idx, window, metrics):
-        if window is None or window.delays.size == 0:
-            return {}
+    def _observed(self, window) -> np.ndarray:
+        if self.source == "measured":
+            meas = [r for r in getattr(window, "telemetry", ()) or ()
+                    if r.source == "measured"]
+            if meas:
+                return np.concatenate([np.asarray(r.durations, np.float64)
+                                       for r in meas])
         if window.quorum_wait is not None:
             # async window: the observed gap is the quorum wait — how long
             # the server sat idle before the K-th arrival let it commit
-            per_round = np.asarray(window.quorum_wait, np.float64)
-        else:
-            act = np.where(window.masks > 0, window.delays, -np.inf)
-            per_round = act.max(axis=1)
-            per_round = np.where(np.isfinite(per_round), per_round, 0.0)
+            return np.asarray(window.quorum_wait, np.float64)
+        act = np.where(window.masks > 0, window.delays, -np.inf)
+        per_round = act.max(axis=1)
+        return np.where(np.isfinite(per_round), per_round, 0.0)
+
+    def update(self, round_idx, window, metrics):
+        if window is None or window.delays.size == 0:
+            return {}
+        per_round = self._observed(window)
         obs = float(per_round.mean())
         self.t_hat = (obs if self.t_hat is None
                       else self.ema * obs + (1.0 - self.ema) * self.t_hat)
@@ -488,7 +518,10 @@ class EngineResult(NamedTuple):
     round_loss: np.ndarray          # (rounds,) mask-weighted mean client loss
     round_times: np.ndarray         # (rounds,) simulated per-round wall-clock
     sim_time: float                 # sum(round_times)
-    tau_per_round: np.ndarray = None  # (rounds,) τ in effect each round
+    tau_per_round: Optional[np.ndarray] = None  # (rounds,) τ each round;
+    #                                 None only when constructed by hand —
+    #                                 run_rounds always fills it. Guard
+    #                                 before arithmetic all the same.
 
 
 class ChunkInfo(NamedTuple):
@@ -609,6 +642,11 @@ def _copy_tree(tree):
     return jax.tree.map(lambda x: jnp.array(x, copy=True), tree)
 
 
+def _tree_nbytes(tree) -> int:
+    """Bytes staged for a chunk: sum of leaf .nbytes (host or device)."""
+    return int(sum(getattr(x, "nbytes", 0) for x in jax.tree.leaves(tree)))
+
+
 def _cached_jit(algo: Algorithm, mode: str, cfg: ModelConfig, sfl: SFLConfig,
                 build: Callable):
     """Per-algorithm-instance jit cache: repeated run_rounds calls with the
@@ -705,6 +743,7 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                tau_history: Optional[List[int]] = None,
                batch_subset_fn: Optional[Callable] = None,
                batch_put: Optional[Callable] = None,
+               telemetry: Optional[TelemetrySink] = None,
                **algo_opts) -> EngineResult:
     """Run rounds [start_round, rounds) of ``algorithm``.
 
@@ -744,6 +783,15 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
     cache), 'deadline' re-derives the straggler-drop masks from the
     schedule's delay rows. Masks, wall-clock round times, and the τ trace
     (EngineResult.tau_per_round) always reflect what was actually applied.
+
+    ``telemetry`` (a repro.obs TelemetrySink) turns on BOTH producers at
+    chunk boundaries: 'sim' records carry the simulator's account of the
+    chunk (durations bit-identical to ChunkInfo.round_times, async quorum
+    waits, per-cohort arrival latencies) and 'measured' records carry the
+    measured clock (block_until_ready-bracketed chunk dispatch, host
+    staging seconds/bytes, DES-prefetch overlap). Controllers see the
+    window's records via SchedWindow.telemetry. With telemetry=None
+    (default) no clock reads or extra syncs happen on the hot path.
 
     Checkpoints save at step = round index of the last completed round in
     the chunk (stateful algorithms bundle their engine state — see
@@ -797,6 +845,7 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                                 jax.tree.map(jnp.asarray, batch0))
 
     R = schedule.n_rounds
+    cohort_bounds = events._cohort_bounds_of(schedule)
     rows = list(range(start_round, rounds))
     mask_of = getattr(algo, "round_mask",
                       lambda sched, r: sched.masks[r % sched.n_rounds])
@@ -857,10 +906,11 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
         else:
             amask_rows = np.stack([sched_eff.masks[v % R]
                                    for v in range(rounds)])
-            timeline = events.compile_timeline(
-                sched_eff, rounds, quorum=sfl.quorum,
-                discount=sfl.staleness_discount, tau=taus_v,
-                mask_rows=amask_rows)
+            with span("engine.compile_timeline", versions=rounds):
+                timeline = events.compile_timeline(
+                    sched_eff, rounds, quorum=sfl.quorum,
+                    discount=sfl.staleness_discount, tau=taus_v,
+                    mask_rows=amask_rows)
             masks = timeline.apply_w[start_round:rounds].copy()
             start_masks = timeline.start_mask[start_round:rounds].copy()
             round_times = timeline.durations[start_round:rounds].copy()
@@ -912,6 +962,39 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
               / np.maximum(m.sum(1), 1.0)).astype(np.float64)
         return ChunkInfo(r0, r1, host, m, rl, round_times[i0:i1])
 
+    def _cohort_arrival(r0, r1):
+        """Per-cohort mean arrival latency (delay + uplink) of the window's
+        active clients — the observed compute/comm ratio input the HASFL
+        cut-layer co-planner needs. None on lazy/sparse schedules, which
+        never materialize fleet-width rows."""
+        if sparse or not hasattr(sched_eff, "delays"):
+            return None
+        i0, i1 = r0 - start_round, r1 - start_round
+        d = np.stack([sched_eff.delays[rr % R] for rr in range(r0, r1)])
+        arr = d + events._comm_of(sched_eff)[None, :]
+        m = time_masks[i0:i1]
+        out = np.zeros(len(cohort_bounds), np.float64)
+        for ci, (cs, ce) in enumerate(cohort_bounds):
+            w = m[:, cs:ce]
+            tot = w.sum()
+            out[ci] = float((arr[:, cs:ce] * w).sum() / tot) if tot else 0.0
+        return out
+
+    def _sim_emit(r0, r1):
+        # the simulator producer: durations are the SAME slice ChunkInfo
+        # carries (the bit-consistency gate in tests/test_obs.py), quorum
+        # waits the same rows the controller window reads
+        i0, i1 = r0 - start_round, r1 - start_round
+        if mode != "async":
+            qw = None
+        elif sparse:
+            qw = qwaits[i0:i1].copy()
+        else:
+            qw = timeline.quorum_wait[r0:r1].copy()
+        telemetry.emit(RoundTelemetry(
+            r0, r1, "sim", mode, round_times[i0:i1].copy(), quorum_wait=qw,
+            cohort_arrival=_cohort_arrival(r0, r1)))
+
     def flush(mets, r0, r1):
         nonlocal last_info
         host = jax.tree.map(np.asarray, mets)      # host sync: chunk boundary
@@ -921,6 +1004,8 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
         rl = ((host["loss"] * m).sum(1)
               / np.maximum(m.sum(1), 1.0)).astype(np.float64)
         last_info = ChunkInfo(r0, r1, host, m, rl, round_times[i0:i1])
+        if telemetry is not None:
+            _sim_emit(r0, r1)
         if chunk_callback is not None:
             chunk_callback(last_info, params, state)
 
@@ -946,7 +1031,9 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
             window = SchedWindow(
                 p0, p1,
                 np.stack([sched_eff.delays[rr % R] for rr in range(p0, p1)]),
-                wmasks, sched_eff.t_server, sched_eff.t_comm, qw)
+                wmasks, sched_eff.t_server, sched_eff.t_comm, qw,
+                telemetry=(telemetry.window(p0, p1)
+                           if telemetry is not None else ()))
         upd = controller.update(r0, window, last_info) or {}
         changed = {k: v for k, v in upd.items() if getattr(sfl, k) != v}
         if not changed:
@@ -1012,6 +1099,7 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                 algo, "python", cfg, sfl,
                 lambda sfl=sfl: jax.jit(lambda p, s, b, m, k: algo.round_fn(
                     cfg, sfl, p, s, b, m, k)))
+            t_seg = perf_counter() if telemetry is not None else 0.0
             for rr in range(r0, r1):
                 i = rr - start_round
                 b = jax.tree.map(jnp.asarray, batch_fn(rr))
@@ -1022,6 +1110,13 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                         and (rr + 1) % ckpt_every == 0 and rr + 1 < rounds):
                     checkpointer.save(rr, _ckpt_tree(params, state),
                                       metadata=ckpt_meta())
+            if telemetry is not None:
+                # per-round flush above is the host sync, so the segment
+                # bracket needs no extra block_until_ready
+                dt, C = perf_counter() - t_seg, r1 - r0
+                telemetry.emit(RoundTelemetry(
+                    r0, r1, "measured", mode, np.full(C, dt / C),
+                    dispatch_seconds=dt))
             if controller is not None and r1 - r0 > 1:
                 # controllers see the whole segment's metrics, exactly as
                 # in scan mode (flush above is per round here)
@@ -1035,6 +1130,7 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                    make_async_chunk_fn if mode == "async" else make_chunk_fn)
         params, state = _copy_tree(params), _copy_tree(state)
         pending_rows: Optional[events.SparseRows] = None
+        tele = telemetry is not None
         for si, (r0, r1) in enumerate(segments):
             if controller is not None:
                 controller_step(si)
@@ -1043,22 +1139,34 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                 lambda sfl=sfl: jax.jit(make_fn(algo, cfg, sfl),
                                         donate_argnums=(0, 1)))
             i, C = r0 - start_round, r1 - r0
+            # measured-producer bracketing: host staging is [t_host,
+            # t_disp), the device chunk is [t_disp, t_sync) closed by
+            # block_until_ready — the DES prefetch stays INSIDE that
+            # dispatch window (that's the overlap being measured), never
+            # after it, so turning telemetry on cannot serialize the
+            # host/device pipeline it is measuring.
+            t_host = perf_counter() if tele else 0.0
+            overlap = 0.0
             if sparse:
-                rows_c = (pending_rows if pending_rows is not None
-                          else stream.take(C))
+                with span("engine.des_take", start=r0, stop=r1):
+                    rows_c = (pending_rows if pending_rows is not None
+                              else stream.take(C))
                 pending_rows = None
                 masks[i:i + C] = rows_c.apply_w
                 round_times[i:i + C] = rows_c.durations
                 qwaits[i:i + C] = rows_c.quorum_wait
-                params, state, mets = chunk_jit(
-                    params, state,
-                    _stack_sparse_chunk(batch_fn, r0, rows_c.start_client,
-                                        subset_fn=batch_subset_fn,
-                                        batch_put=batch_put),
-                    jnp.asarray(rows_c.start_client),
-                    jnp.asarray(rows_c.start_slot),
-                    jnp.asarray(rows_c.apply_slot),
-                    jnp.asarray(rows_c.apply_w), keys[i:i + C])
+                with span("engine.stage", start=r0, stop=r1):
+                    staged = _stack_sparse_chunk(
+                        batch_fn, r0, rows_c.start_client,
+                        subset_fn=batch_subset_fn, batch_put=batch_put)
+                t_disp = perf_counter() if tele else 0.0
+                with span("engine.dispatch", start=r0, stop=r1):
+                    params, state, mets = chunk_jit(
+                        params, state, staged,
+                        jnp.asarray(rows_c.start_client),
+                        jnp.asarray(rows_c.start_slot),
+                        jnp.asarray(rows_c.apply_slot),
+                        jnp.asarray(rows_c.apply_w), keys[i:i + C])
                 if controller is None and si + 1 < len(segments):
                     # host/device overlap: JAX dispatch is async, so the
                     # DES generates the NEXT chunk's events while the
@@ -1066,14 +1174,33 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                     # host-sync point). Controller runs can't prefetch —
                     # the next boundary may rebuild the stream.
                     n0, n1 = segments[si + 1]
-                    pending_rows = stream.take(n1 - n0)
+                    t_pre = perf_counter() if tele else 0.0
+                    with span("engine.des_prefetch", start=n0, stop=n1):
+                        pending_rows = stream.take(n1 - n0)
+                    if tele:
+                        overlap = perf_counter() - t_pre
             else:
+                with span("engine.stage", start=r0, stop=r1):
+                    staged = _stack_chunk(batch_fn, r0, C)
                 extra = ((jnp.asarray(start_masks[i:i + C]),)
                          if mode == "async" else ())
-                params, state, mets = chunk_jit(
-                    params, state, _stack_chunk(batch_fn, r0, C), *extra,
-                    jnp.asarray(masks[i:i + C]), keys[i:i + C])
-            flush(mets, r0, r1)
+                t_disp = perf_counter() if tele else 0.0
+                with span("engine.dispatch", start=r0, stop=r1):
+                    params, state, mets = chunk_jit(
+                        params, state, staged, *extra,
+                        jnp.asarray(masks[i:i + C]), keys[i:i + C])
+            if tele:
+                jax.block_until_ready(mets)
+                t_sync = perf_counter()
+                telemetry.emit(RoundTelemetry(
+                    r0, r1, "measured", mode,
+                    np.full(C, (t_sync - t_disp) / C),
+                    staging_seconds=t_disp - t_host,
+                    staging_bytes=_tree_nbytes(staged),
+                    dispatch_seconds=t_sync - t_disp,
+                    overlap_seconds=overlap))
+            with span("engine.flush", start=r0, stop=r1):
+                flush(mets, r0, r1)
             if (checkpointer is not None and ckpt_every
                     and r1 % ckpt_every == 0 and r1 < rounds):
                 checkpointer.save(r1 - 1, _ckpt_tree(params, state),

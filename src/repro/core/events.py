@@ -72,6 +72,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, SFLConfig
 from repro.core import zo
+from repro.obs.trace import span
 from repro.core.population import AvailRow
 from repro.core.splitfed import _client_round
 from repro.models import merge_params, split_params
@@ -769,8 +770,9 @@ class TimelineStream:
 
     def take(self, n: int) -> SparseRows:
         n = min(int(n), self.n_versions - self.sim.v)
-        return _pack_rows([self._step() for _ in range(n)],
-                          self.k_max, self.k_max, self.capacity)
+        with span("events.stream_take", v=self.sim.v, n=n):
+            return _pack_rows([self._step() for _ in range(n)],
+                              self.k_max, self.k_max, self.capacity)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -854,10 +856,12 @@ def compile_sparse_timeline(schedule, n_versions: int, *, quorum: int = 0,
                     collect_events=True,
                     cohort_bounds=_cohort_bounds_of(schedule))
     steps = []
-    for v in range(V):
-        mask = mask_rows[v] if mask_rows is not None \
-            else schedule.masks[v % R]
-        steps.append(sim.step(schedule.delays[v % R], mask, int(taus[v])))
+    with span("events.compile_sparse_timeline", versions=V, clients=M):
+        for v in range(V):
+            mask = mask_rows[v] if mask_rows is not None \
+                else schedule.masks[v % R]
+            steps.append(sim.step(schedule.delays[v % R], mask,
+                                  int(taus[v])))
     if exact:
         k_start = max([1] + [len(s.start_clients) for s in steps])
         k_apply = max([1] + [len(s.apply_clients) for s in steps])

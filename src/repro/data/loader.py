@@ -15,6 +15,8 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.obs.trace import span
+
 
 def client_pools(client_indices: List[np.ndarray]) -> List[np.ndarray]:
     """Resolve per-client index pools once (the empty-pool fallback hoisted
@@ -102,7 +104,9 @@ class FederatedLoader:
         ``round_batch(round_idx)[client_ids]`` — the sparse engine's O(K)
         staging path (device placement is the engine's concern: sparse
         chunks are stacked host-side first)."""
-        return make_client_batches(self.dataset, self.client_indices,
-                                   round_idx, self.batch_per_client,
-                                   self.seed, client_ids=client_ids,
-                                   pools=self.pools)
+        with span("loader.subset_batch", round=round_idx,
+                  k=len(client_ids)):
+            return make_client_batches(self.dataset, self.client_indices,
+                                       round_idx, self.batch_per_client,
+                                       self.seed, client_ids=client_ids,
+                                       pools=self.pools)

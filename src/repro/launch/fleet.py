@@ -28,6 +28,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import MeshConfig, SFLConfig
 from repro.core import events
+from repro.obs.trace import span
 from repro.core.population import ClientPopulation
 from repro.sharding.planner import EventStorePlan, plan_event_store
 from repro.sharding.specs import (_guard, event_store_pspecs,
@@ -46,19 +47,21 @@ class FleetPlacement:
 
     def place_store(self, store: Dict[str, jax.Array]) -> Dict[str, Any]:
         """device_put the ring store with its slot dim over 'data'."""
-        specs = event_store_pspecs(store, slot_axis="data",
-                                   axis_sizes=self.axis_sizes)
-        return {k: jax.device_put(v, NamedSharding(self.mesh, specs[k]))
-                for k, v in store.items()}
+        with span("fleet.place_store", leaves=len(store)):
+            specs = event_store_pspecs(store, slot_axis="data",
+                                       axis_sizes=self.axis_sizes)
+            return {k: jax.device_put(v, NamedSharding(self.mesh, specs[k]))
+                    for k, v in store.items()}
 
     def place_vectors(self, population: ClientPopulation
                       ) -> Dict[str, jax.Array]:
         """device_put the fleet's (M,) system vectors over 'data'."""
-        vecs = population.client_vectors()
-        specs = population_pspecs(vecs, axis_sizes=self.axis_sizes)
-        return {k: jax.device_put(np.asarray(v),
-                                  NamedSharding(self.mesh, specs[k]))
-                for k, v in vecs.items()}
+        with span("fleet.place_vectors", clients=population.n_clients):
+            vecs = population.client_vectors()
+            specs = population_pspecs(vecs, axis_sizes=self.axis_sizes)
+            return {k: jax.device_put(np.asarray(v),
+                                      NamedSharding(self.mesh, specs[k]))
+                    for k, v in vecs.items()}
 
     def batch_put(self, tree: Any) -> Any:
         """Place a staged (C, K, ...) sparse chunk: the scan (C) dim
@@ -71,7 +74,8 @@ class FleetPlacement:
             ax = _guard(np.shape(x)[1], "data", self.axis_sizes)
             spec = P(None, ax, *((None,) * (np.ndim(x) - 2)))
             return jax.device_put(x, NamedSharding(self.mesh, spec))
-        return jax.tree.map(put, tree)
+        with span("fleet.batch_put"):
+            return jax.tree.map(put, tree)
 
 
 def build_fleet_placement(sfl: SFLConfig, *,

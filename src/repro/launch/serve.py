@@ -3,18 +3,33 @@
 CPU demo:
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
         --batch 2 --prompt-len 16 --gen 8
+
+Observability: every ``generate`` call records serve.requests /
+serve.tokens counters and a serve.generate_seconds histogram in the
+process-wide obs registry, with spans around prefill and the decode loop.
+``stats()`` is the JSON stats surface; ``--stats`` prints it after the
+demo request and ``--stats-port N`` serves it at GET /stats from a
+background stdlib HTTP server (the same snapshot a fleet scraper would
+poll).
 """
 from __future__ import annotations
 
 import argparse
 import functools
+import json
+import threading
 import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from time import perf_counter
 
 import jax
 import jax.numpy as jnp
 
+import repro.obs as obs
 from repro.configs import get_config
 from repro.models import decode_step, init_cache, init_params, prefill
+
+_T_START = time.time()
 
 # jit'd decode_step per ModelConfig (hashable, frozen): repeated generate()
 # calls reuse the compiled executable instead of re-tracing a fresh lambda
@@ -35,19 +50,64 @@ def generate(cfg, params, batch, prompt_len: int, gen: int, *,
     """Greedy / temperature sampling after a batched prefill."""
     B = batch["tokens"].shape[0]
     cache_len = prompt_len + gen
-    logits, cache = prefill(cfg, params, batch, cache_len=cache_len)
-    out = []
-    step = decode_step_jit(cfg)
-    tok = None
-    for i in range(gen):
-        if temperature > 0 and key is not None:
-            key, k2 = jax.random.split(key)
-            tok = jax.random.categorical(k2, logits[:, -1] / temperature)[:, None]
-        else:
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        out.append(tok)
-        logits, cache = step(params, tok, cache, jnp.int32(prompt_len + i))
-    return jnp.concatenate(out, axis=1)
+    reg = obs.get_registry()
+    t0 = perf_counter()
+    with obs.span("serve.generate", batch=B, gen=gen):
+        with obs.span("serve.prefill", prompt_len=prompt_len):
+            logits, cache = prefill(cfg, params, batch, cache_len=cache_len)
+        out = []
+        step = decode_step_jit(cfg)
+        tok = None
+        with obs.span("serve.decode", gen=gen):
+            for i in range(gen):
+                if temperature > 0 and key is not None:
+                    key, k2 = jax.random.split(key)
+                    tok = jax.random.categorical(
+                        k2, logits[:, -1] / temperature)[:, None]
+                else:
+                    tok = jnp.argmax(logits[:, -1],
+                                     axis=-1)[:, None].astype(jnp.int32)
+                out.append(tok)
+                logits, cache = step(params, tok, cache,
+                                     jnp.int32(prompt_len + i))
+        toks = jax.block_until_ready(jnp.concatenate(out, axis=1))
+    dt = perf_counter() - t0
+    reg.counter("serve.requests").inc()
+    reg.counter("serve.tokens").inc(B * gen)
+    reg.histogram("serve.generate_seconds").observe(dt)
+    reg.gauge("serve.last_tok_per_s").set(B * gen / dt if dt else 0.0)
+    return toks
+
+
+def stats() -> dict:
+    """The stats surface: uptime + the obs metrics snapshot."""
+    return {"uptime_s": round(time.time() - _T_START, 3),
+            "metrics": obs.get_registry().snapshot()}
+
+
+class _StatsHandler(BaseHTTPRequestHandler):
+    def do_GET(self):
+        if self.path not in ("/stats", "/"):
+            self.send_error(404)
+            return
+        body = json.dumps(stats(), sort_keys=True).encode()
+        self.send_response(200)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, *a):        # keep request noise off stdout
+        pass
+
+
+def serve_stats(port: int) -> ThreadingHTTPServer:
+    """Start the background stats endpoint; returns the server (call
+    .shutdown() to stop). Bound to localhost — it reports process
+    metrics, it is not a public API."""
+    srv = ThreadingHTTPServer(("127.0.0.1", port), _StatsHandler)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    return srv
 
 
 def main(argv=None):
@@ -58,7 +118,15 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stats", action="store_true",
+                    help="print the JSON stats snapshot after the request")
+    ap.add_argument("--stats-port", type=int, default=0,
+                    help="serve GET /stats on 127.0.0.1:PORT (0 = off)")
     args = ap.parse_args(argv)
+
+    srv = serve_stats(args.stats_port) if args.stats_port else None
+    if srv is not None:
+        print(f"stats: http://127.0.0.1:{srv.server_address[1]}/stats")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     key = jax.random.PRNGKey(args.seed)
@@ -81,6 +149,10 @@ def main(argv=None):
     print(f"generated {toks.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")
     print(toks)
+    if args.stats:
+        print(json.dumps(stats(), indent=2, sort_keys=True))
+    if srv is not None:
+        srv.shutdown()
 
 
 if __name__ == "__main__":

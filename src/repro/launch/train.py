@@ -22,6 +22,7 @@ import time
 import jax
 import numpy as np
 
+import repro.obs as obs
 from repro.ckpt import Checkpointer
 from repro.configs import SFLConfig, get_config
 from repro.core import engine, events
@@ -100,6 +101,28 @@ def main(argv=None):
                          "starting point)")
     ap.add_argument("--tau-max", type=int, default=64,
                     help="cap for --adaptive-tau's planner")
+    ap.add_argument("--tau-source", default="sim",
+                    choices=["sim", "measured"],
+                    help="clock --adaptive-tau observes the straggler gap "
+                         "on: 'sim' reads the schedule's simulated rows "
+                         "(historical behaviour); 'measured' reads the "
+                         "measured-clock RoundTelemetry records from the "
+                         "engine's sink (real per-chunk wall time)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="attach a TelemetrySink to the engine (sim + "
+                         "measured producers at chunk boundaries) and print "
+                         "the telemetry/metrics summary at run end")
+    ap.add_argument("--trace-out", default="",
+                    help="write the span trace here at run end: .json = "
+                         "Chrome trace-event format (chrome://tracing / "
+                         "perfetto), .jsonl = one span per line")
+    ap.add_argument("--log-jsonl", default="",
+                    help="structured JSONL run log: per-round rows plus "
+                         "per-chunk RoundTelemetry summaries; resume "
+                         "truncates re-run rounds so nothing duplicates")
+    ap.add_argument("--log-every", type=int, default=1,
+                    help="log every Nth round row to --log-jsonl (chunk "
+                         "rows always log)")
     ap.add_argument("--t-server", type=float, default=0.1,
                     help="simulated server step time (s) for the wall-clock "
                          "model")
@@ -236,8 +259,24 @@ def main(argv=None):
                       *events.resolve_store_geometry(sfl))
                   if args.timeline == "sparse" else ""))
 
-    controller = (engine.AdaptiveTau(tau_max=args.tau_max)
+    if args.log_every < 1:
+        ap.error(f"--log-every must be >= 1: got {args.log_every}")
+    if args.tau_source == "measured" and not args.adaptive_tau:
+        ap.error("--tau-source measured configures --adaptive-tau's clock; "
+                 "pass --adaptive-tau")
+    controller = (engine.AdaptiveTau(tau_max=args.tau_max,
+                                     source=args.tau_source)
                   if args.adaptive_tau else None)
+    # the observability layer: sink (engine producers -> controller/log),
+    # tracer (span records over the hot path), metrics (running totals)
+    sink = (obs.TelemetrySink()
+            if (args.telemetry or args.log_jsonl
+                or args.tau_source == "measured") else None)
+    tracer = None
+    if args.trace_out:
+        tracer = obs.SpanTracer()
+        obs.install(tracer)
+    registry = obs.get_registry()
 
     # fault tolerance: resume if a checkpoint exists (engine state —
     # e.g. the GAS activation buffer — rides along in the bundle, and
@@ -268,6 +307,10 @@ def main(argv=None):
         deadline=args.deadline,
         t_server=args.t_server, t_gen=args.t_gen, t_comm=args.t_comm)
 
+    runlog = (obs.RunLog(args.log_jsonl, resume_round=start_round,
+                         log_every=args.log_every)
+              if args.log_jsonl else None)
+
     wall = strag.WallClock()
     t0 = time.time()
 
@@ -277,6 +320,28 @@ def main(argv=None):
             print(f"round {r:4d}  loss {info.round_loss[i]:.4f}  active "
                   f"{int((info.masks[i] > 0).sum())}/{n_clients}  "
                   f"wall {time.time()-t0:.1f}s  sim_t {sim_t:.1f}")
+            if runlog is not None:
+                runlog.round(r, loss=float(info.round_loss[i]),
+                             active=int((info.masks[i] > 0).sum()),
+                             sim_t=float(sim_t),
+                             wall_s=round(time.time() - t0, 3))
+        if sink is not None:
+            registry.counter("train.rounds").inc(info.stop - info.start)
+            registry.counter("train.chunks").inc()
+            registry.gauge("train.last_loss").set(float(info.round_loss[-1]))
+            h = registry.histogram("train.sim_round_seconds")
+            for dt in info.round_times:
+                h.observe(float(dt))
+            meas = sink.latest("measured")
+            if meas is not None and meas.stop == info.stop:
+                registry.histogram("train.chunk_dispatch_seconds").observe(
+                    meas.dispatch_seconds)
+                registry.counter("train.staging_bytes").inc(
+                    meas.staging_bytes)
+        if runlog is not None:
+            runlog.chunk(info.start, info.stop,
+                         telemetry=(sink.window(info.start, info.stop)
+                                    if sink is not None else ()))
 
     if placement is not None and state is None:
         # pre-place the initial ring store so the scan's donated state
@@ -290,11 +355,26 @@ def main(argv=None):
         controller=controller, tau_history=tau_history,
         batch_subset_fn=(loader.subset_batch
                          if args.loader == "subset" else None),
-        batch_put=placement.batch_put if placement is not None else None)
+        batch_put=placement.batch_put if placement is not None else None,
+        telemetry=sink)
     if controller is not None and controller.trace:
         taus = [t for _, t in controller.trace]
-        print(f"adaptive tau: start {args.tau} -> final {taus[-1]} "
-              f"(decisions: {taus})")
+        print(f"adaptive tau ({args.tau_source}): start {args.tau} -> "
+              f"final {taus[-1]} (decisions: {taus})")
+    if runlog is not None:
+        runlog.close()
+        print(f"run log: {args.log_jsonl}")
+    if tracer is not None:
+        n_spans = (tracer.export_jsonl(args.trace_out)
+                   if args.trace_out.endswith(".jsonl")
+                   else tracer.export_chrome(args.trace_out))
+        print(f"trace: {n_spans} spans -> {args.trace_out}")
+    if args.telemetry:
+        import json
+        print("telemetry summary:")
+        print(json.dumps(sink.summary(), indent=2, sort_keys=True))
+        print("metrics:")
+        print(json.dumps(registry.snapshot(), indent=2, sort_keys=True))
     return result.params
 
 

@@ -187,6 +187,69 @@ GOLDENS = [
         "def apply(x, seeds, coeffs):\n"
         "    return zo_replay_leaf(x, seeds, coeffs)\n",
     ),
+    (
+        "telemetry-purity",
+        # positive: host-sync coercion inside a @jax.jit body
+        "import jax\n"
+        "@jax.jit\n"
+        "def step(x):\n"
+        "    return float(x + 1)\n",
+        # negative: coercion at the dispatch boundary, outside jit
+        "import jax\n"
+        "@jax.jit\n"
+        "def step(x):\n"
+        "    return x + 1\n"
+        "def run(x):\n"
+        "    return float(step(x).sum())\n",
+    ),
+    (
+        "telemetry-purity",
+        # positive: obs span probe inside a lax.scan body — fires once at
+        # trace time, then never again
+        "from jax import lax\n"
+        "from repro.obs import span\n"
+        "def chunk(xs):\n"
+        "    def body(c, x):\n"
+        "        with span('round'):\n"
+        "            c = c + x\n"
+        "        return c, c\n"
+        "    return lax.scan(body, 0.0, xs)\n",
+        # negative: the engine pattern — span brackets the dispatch, the
+        # traced body stays pure
+        "from jax import lax\n"
+        "from repro.obs import span\n"
+        "def chunk(xs):\n"
+        "    def body(c, x):\n"
+        "        return c + x, c\n"
+        "    with span('dispatch'):\n"
+        "        return lax.scan(body, 0.0, xs)\n",
+    ),
+    (
+        "telemetry-purity",
+        # positive: wall-clock read inside a jit'd lambda
+        "import jax, time\n"
+        "f = jax.jit(lambda x: x * time.perf_counter())\n",
+        # negative: perf_counter bracketing outside the executable
+        "import jax, time\n"
+        "f = jax.jit(lambda x: x * 2)\n"
+        "def timed(x):\n"
+        "    t0 = time.perf_counter()\n"
+        "    y = jax.block_until_ready(f(x))\n"
+        "    return y, time.perf_counter() - t0\n",
+    ),
+    (
+        "telemetry-purity",
+        # positive: .item() in a function handed to jax.jit by name
+        "import jax\n"
+        "def step(x):\n"
+        "    return x.sum().item()\n"
+        "step_jit = jax.jit(step)\n",
+        # negative: same shape, body pure
+        "import jax\n"
+        "def step(x):\n"
+        "    return x.sum()\n"
+        "step_jit = jax.jit(step)\n",
+    ),
 ]
 
 
@@ -200,7 +263,7 @@ def test_rule_golden(rule, positive, negative):
         f"{rule} must not flag its negative snippet"
 
 
-def test_all_six_rules_covered():
+def test_all_registered_rules_covered():
     """Every registered rule has at least one golden pair above."""
     covered = {r for r, _, _ in GOLDENS}
     assert covered == {r.id for r in default_rules()}
