@@ -51,7 +51,8 @@ def run_mu_splitfed_result(cfg, params, ds, parts, key, *, M, tau, cut,
                            chunk_size=8, algorithm="mu_splitfed",
                            mode="scan", aggregation=None, quorum=0,
                            staleness_discount=1.0, timeline="dense",
-                           k_max=0, ring_capacity=0,
+                           k_max=0, ring_capacity=0, faults=None,
+                           quorum_timeout=0.0, max_retries=3,
                            telemetry=None) -> engine.EngineResult:
     """Full EngineResult for one MU-SplitFed-family run through the engine.
 
@@ -73,7 +74,8 @@ def run_mu_splitfed_result(cfg, params, ds, parts, key, *, M, tau, cut,
                     straggler_rate=straggler_scale, population=population,
                     quorum=quorum, staleness_discount=staleness_discount,
                     timeline=timeline, k_max=k_max,
-                    ring_capacity=ring_capacity)
+                    ring_capacity=ring_capacity, faults=faults,
+                    quorum_timeout=quorum_timeout, max_retries=max_retries)
     sched = strag.make_schedule(seed, rounds,
                                 population=strag.ClientPopulation.resolve(sfl),
                                 t_server=t_server, t_comm=t_comm)

@@ -1,0 +1,205 @@
+"""Fig. 7 (beyond-paper): graceful degradation under injected faults —
+crash rate × quorum-timeout sweep over the semi-async engine.
+
+The paper's premise is that the Split Server must not block on its
+slowest clients; at fleet scale the dominant failure mode is harsher
+(PAPERS.md, "Optimizing SFL with Unstable Client Participation"):
+clients that *never* deliver. This benchmark injects crash-after-fetch
+faults (core/faults.py) into the event timeline and measures what the
+two degradation knobs buy:
+
+  quorum_timeout  a commit whose quorum hasn't filled by t + timeout
+                  proceeds with whatever arrived (weights renormalized)
+                  — liveness at the cost of thinner aggregation.
+  AdaptiveQuorum  shrinks the commit quorum K toward the observed
+                  delivery rate, so commits stay quorum-paced instead of
+                  riding the timeout deadline every version.
+
+Reported per arm: loss curve, simulated wall-clock, delivered/started
+ratio and the full fault counter set from the telemetry sink — the
+loss-vs-wall-clock degradation curves land in bench_fig7.json.
+
+    PYTHONPATH=src python -m benchmarks.fig7_faults [--rounds 60]
+    PYTHONPATH=src python -m benchmarks.fig7_faults --smoke   # CI gate:
+        FaultPlan.none() bit-exact with faults=None on sync scan,
+        async-dense, and async-sparse; liveness (all rounds complete,
+        monotone commits) under crash=0.2 with a quorum timeout
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from benchmarks.common import make_setup, run_mu_splitfed_result
+from repro.core.engine import AdaptiveQuorum
+from repro.core.faults import FaultPlan
+from repro.core.population import ClientPopulation, Cohort, DelayModel
+from repro.obs.telemetry import TelemetrySink
+
+T_SERVER = 0.25
+LR_SERVER = 5e-3
+LR_CLIENT = 1e-3
+CUT = 1
+QUORUM = 6                  # K of M=8
+DISCOUNT = 0.5
+TAU = 2
+
+CRASH_RATES = (0.0, 0.1, 0.2, 0.4)
+TIMEOUTS = (0.5, 2.0)
+
+POPULATION = ClientPopulation(cohorts=(
+    Cohort(name="fast", n=6, delay=DelayModel(base=0.3, scale=0.3)),
+    Cohort(name="slow", n=2, delay=DelayModel(base=4.0, scale=0.5)),
+))
+M = POPULATION.n_clients
+
+FAULT_FIELDS = ("started", "evicted", "crashed", "lost", "corrupt",
+                "dups", "retries", "timeouts")
+
+
+def _counters(sink: TelemetrySink) -> dict:
+    recs = sink.records("sim")
+    return {f: int(sum(getattr(r, f) for r in recs)) for f in FAULT_FIELDS}
+
+
+def _arm(cfg, params, ds, parts, key, *, rounds, seed, mode="async",
+         **kw):
+    sink = TelemetrySink(capacity=4096)
+    res = run_mu_splitfed_result(
+        cfg, params, ds, parts, key, M=M, tau=TAU, cut=CUT, rounds=rounds,
+        lr_server=LR_SERVER, lr_client=LR_CLIENT, lr_global=1.0,
+        population=POPULATION, t_server=T_SERVER, seed=seed, chunk_size=4,
+        mode=mode, telemetry=sink, **kw)
+    c = _counters(sink)
+    dropped = c["crashed"] + c["lost"] + c["corrupt"] + c["evicted"]
+    return {
+        "loss": [float(x) for x in res.round_loss],
+        "round_times": [float(x) for x in res.round_times],
+        "total_time": float(res.sim_time),
+        "final_loss": float(np.mean(res.round_loss[-3:])),
+        "counters": c,
+        "delivery_rate": (round(1.0 - dropped / c["started"], 4)
+                          if c["started"] else 1.0),
+    }
+
+
+def run(rounds=60, seed=0):
+    """The degradation sweep: crash rate × quorum-timeout, plus an
+    AdaptiveQuorum arm per crash rate at the tight timeout."""
+    cfg, params, ds, parts, key = make_setup(M=M, seed=seed)
+    base = dict(rounds=rounds, seed=seed, algorithm="async_mu_splitfed",
+                aggregation="seed_replay", quorum=QUORUM,
+                staleness_discount=DISCOUNT)
+    arms = {}
+    for crash in CRASH_RATES:
+        plan = FaultPlan(crash=crash) if crash else None
+        for to in TIMEOUTS:
+            arms[f"crash{crash:g}_to{to:g}"] = _arm(
+                cfg, params, ds, parts, key, faults=plan,
+                quorum_timeout=to, **base)
+        if crash:
+            arms[f"crash{crash:g}_to{TIMEOUTS[0]:g}_adaptiveK"] = _arm(
+                cfg, params, ds, parts, key, faults=plan,
+                quorum_timeout=TIMEOUTS[0],
+                controller=AdaptiveQuorum(), **base)
+    return {"t_server": T_SERVER, "quorum": QUORUM,
+            "staleness_discount": DISCOUNT, "tau": TAU,
+            "crash_rates": list(CRASH_RATES), "timeouts": list(TIMEOUTS),
+            "population": POPULATION.describe(), "arms": arms}
+
+
+def smoke(rounds=12, seed=0):
+    """The chaos-smoke CI gate.
+
+    1. Zero-fault equivalence: FaultPlan.none() must be BIT-EXACT with
+       faults=None on every execution path — sync scan, async dense,
+       async sparse. The fault layer may not perturb a clean run by so
+       much as one extra RNG draw.
+    2. Liveness under faults: crash=0.2 with a quorum timeout completes
+       all rounds, commit times strictly increase, and every version's
+       duration is finite — no stall, no deadlock.
+
+    Returns the degradation record the CI job uploads as its artifact.
+    """
+    cfg, params, ds, parts, key = make_setup(M=M, seed=seed)
+    kw = dict(rounds=rounds, seed=seed)
+    paths = {
+        "sync_scan": dict(mode="scan", aggregation="seed_replay"),
+        "async_dense": dict(mode="async", algorithm="async_mu_splitfed",
+                            aggregation="seed_replay", quorum=QUORUM,
+                            staleness_discount=DISCOUNT),
+        "async_sparse": dict(mode="async", algorithm="async_mu_splitfed",
+                             aggregation="seed_replay", quorum=QUORUM,
+                             staleness_discount=DISCOUNT,
+                             timeline="sparse"),
+    }
+    for name, pkw in paths.items():
+        clean = _arm(cfg, params, ds, parts, key, faults=None, **pkw, **kw)
+        inert = _arm(cfg, params, ds, parts, key, faults=FaultPlan.none(),
+                     **pkw, **kw)
+        assert clean["loss"] == inert["loss"] and \
+            clean["round_times"] == inert["round_times"], \
+            f"{name}: FaultPlan.none() != faults=None (not bit-exact)"
+        assert all(v == 0 for f, v in inert["counters"].items()
+                   if f != "started"), \
+            f"{name}: zero-fault run reported fault counters"
+    print(f"smoke: FaultPlan.none() bit-exact with faults=None on "
+          f"{', '.join(paths)}")
+
+    live = {}
+    for name in ("async_dense", "async_sparse"):
+        a = _arm(cfg, params, ds, parts, key,
+                 faults=FaultPlan(crash=0.2), quorum_timeout=1.0,
+                 **paths[name], **kw)
+        assert len(a["loss"]) == rounds, \
+            f"{name}: {len(a['loss'])}/{rounds} rounds under crash=0.2"
+        ct = np.cumsum(a["round_times"])
+        assert np.all(np.isfinite(ct)) and np.all(np.diff(ct) > 0), \
+            f"{name}: commit times not finite/monotone under faults"
+        assert a["counters"]["crashed"] > 0, \
+            f"{name}: crash=0.2 injected no crashes over {rounds} rounds"
+        live[name] = a
+        print(f"smoke: {name} liveness OK under crash=0.2 — "
+              f"{rounds}/{rounds} rounds, delivery {a['delivery_rate']}, "
+              f"counters {a['counters']}")
+    assert live["async_dense"]["counters"] == \
+        live["async_sparse"]["counters"], \
+        "dense and sparse disagree on fault accounting"
+    return {"gate": "zero-fault-bitexact+liveness", "rounds": rounds,
+            "crash": 0.2, "quorum_timeout": 1.0, "quorum": QUORUM,
+            "arms": live}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: zero-fault bit-exactness + "
+                         "liveness gates; writes the degradation record "
+                         "to --out")
+    ap.add_argument("--out", default="bench_fig7.json")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        res = smoke(seed=args.seed)
+        json.dump(res, open(args.out, "w"), indent=1)
+        print(f"smoke degradation record -> {args.out}")
+        return res
+
+    res = run(rounds=args.rounds, seed=args.seed)
+    print(f"population: {res['population']}\n")
+    print(f"{'arm':>24s} {'total_t':>8s} {'final':>7s} {'deliv':>6s} "
+          f"{'timeouts':>8s} {'crashed':>7s}")
+    for name, a in res["arms"].items():
+        print(f"{name:>24s} {a['total_time']:8.1f} {a['final_loss']:7.4f} "
+              f"{a['delivery_rate']:6.3f} {a['counters']['timeouts']:8d} "
+              f"{a['counters']['crashed']:7d}")
+    json.dump(res, open(args.out, "w"), indent=1)
+    print(f"\ndegradation curves -> {args.out}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -102,13 +102,15 @@ class FileContext:
 
 
 def default_rules() -> List[Rule]:
+    from repro.analysis.rules_faults import FaultIsolation
     from repro.analysis.rules_jit import (DonationSafety, HostSync,
                                           TraceLeak)
     from repro.analysis.rules_obs import TelemetryPurity
     from repro.analysis.rules_pallas import PallasBudget
     from repro.analysis.rules_rng import JaxKeyReuse, RngDiscipline
     return [RngDiscipline(), JaxKeyReuse(), TraceLeak(), HostSync(),
-            DonationSafety(), PallasBudget(), TelemetryPurity()]
+            DonationSafety(), PallasBudget(), TelemetryPurity(),
+            FaultIsolation()]
 
 
 def iter_py_files(paths: Sequence[str]) -> List[str]:

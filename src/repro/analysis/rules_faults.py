@@ -1,0 +1,94 @@
+"""Fault-isolation rule: fault injection stays out of jit-traced bodies.
+
+The chaos-smoke CI gate promises that ``FaultPlan.none()`` is BIT-EXACT
+with ``faults=None`` on every execution path. That guarantee holds
+because faults are resolved entirely on the host side: the event sim
+(core/events.py) draws dispatch fates, parks crashed clients, and drops
+corrupt deliveries *before* anything reaches the jit'd chunk — the
+traced executable only ever sees dense committed batches and has no idea
+faults exist.
+
+A fault-plan read inside a traced body breaks that in one of two ways.
+If the plan flows in as a Python object, its rates are frozen at trace
+time — one plan's outcomes baked into the cached executable, silently
+reused for every other plan (including the zero-fault run, which is how
+the bit-exactness gate dies). If it flows in as a traced array, the
+clean path pays the fault branch on every step, and the zero-overhead
+contract dies instead. Either way the fix is the same: resolve faults in
+the event sim and keep the traced function fault-blind.
+
+This rule reuses the traced-body discovery from rules_obs (``@jax.jit``
+decorations, ``jax.jit(f)`` wrappings, lax control-flow body arguments)
+and flags any reference to the fault vocabulary inside one.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from repro.analysis import astutil
+from repro.analysis.core import FileContext, Finding, Rule
+from repro.analysis.rules_obs import traced_bodies
+
+# anything importable from the fault subsystem
+_FAULT_MODULE = "repro.core.faults"
+
+# identifiers that ARE fault state, wherever they appear: the plan types,
+# the per-dispatch fate resolver, and the config knobs that only exist to
+# parameterize fault handling
+_FAULT_ATTRS = {"faults", "fault_plan", "dispatch_fates", "kill_round",
+                "quorum_timeout", "max_retries"}
+_FAULT_NAMES = {"FaultPlan", "ResolvedFaults", "parse_faults",
+                "record_checksum"} | _FAULT_ATTRS
+
+
+class FaultIsolation(Rule):
+    id = "fault-isolation"
+    doc = ("fault-plan state (FaultPlan, dispatch_fates, sfl.faults, "
+           "quorum_timeout, ...) referenced inside a jit/scan-traced body "
+           "— fault outcomes are host-side DES control flow; a trace-time "
+           "read bakes one plan into the cached executable (or makes the "
+           "clean path pay the fault branch) and breaks the zero-fault "
+           "bit-exactness gate. Resolve faults in core/events.py and keep "
+           "the traced chunk fault-blind.")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for body in traced_bodies(ctx):
+            for n in ast.walk(body):
+                ref = self._fault_ref(ctx, n)
+                if ref:
+                    yield self.finding(
+                        ctx, n,
+                        f"fault-plan reference '{ref}' inside a traced "
+                        "body — fault handling is host-side event-sim "
+                        "logic; a trace-time read freezes one plan's "
+                        "outcomes into the cached executable and breaks "
+                        "the zero-fault bit-exactness gate. Resolve "
+                        "faults in core/events.py and pass the traced "
+                        "function only committed batches.")
+
+    def _fault_ref(self, ctx: FileContext, n: ast.AST) -> Optional[str]:
+        if isinstance(n, ast.Attribute):
+            # sfl.faults / plan.dispatch_fates / carry.quorum_timeout
+            if n.attr in _FAULT_ATTRS:
+                return astutil.dotted_name(n) or f".{n.attr}"
+            resolved = astutil.resolve_name(n, ctx.aliases)
+            if resolved and resolved.startswith(_FAULT_MODULE + "."):
+                return resolved
+        elif isinstance(n, ast.Name):
+            # fault_plan.crash flags via its base name; but when the parent
+            # attribute is itself fault vocabulary (sfl.faults), that node
+            # already reports — don't double up
+            parent = getattr(n, "parent", None)
+            if isinstance(parent, ast.Attribute):
+                pres = astutil.resolve_name(parent, ctx.aliases)
+                if parent.attr in _FAULT_ATTRS or (
+                        pres and pres.startswith(_FAULT_MODULE + ".")):
+                    return None
+            resolved = astutil.resolve_name(n, ctx.aliases) or n.id
+            if resolved == _FAULT_MODULE \
+                    or resolved.startswith(_FAULT_MODULE + "."):
+                return n.id
+            if n.id in _FAULT_NAMES:
+                return n.id
+        return None

@@ -64,6 +64,53 @@ def _is_jit_call(ctx: FileContext, node: ast.AST) -> bool:
     return False
 
 
+def traced_bodies(ctx: FileContext) -> List[ast.AST]:
+    """Every function/lambda in the file whose body jit traces: ``@jax.jit``
+    decorations (bare or via partial), ``jax.jit(f)`` wrappings of same-file
+    defs and lambdas, and the body arguments of the lax control-flow
+    combinators. Shared by every rule that polices what may live inside a
+    traced body (telemetry-purity, fault-isolation)."""
+    defs = {}                       # name -> FunctionDef (same file)
+    for n in ast.walk(ctx.tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(n.name, n)
+
+    out: List[ast.AST] = []
+    seen: Set[int] = set()
+
+    def add(node: Optional[ast.AST]) -> None:
+        if node is None or id(node) in seen:
+            return
+        if isinstance(node, ast.Lambda):
+            seen.add(id(node))
+            out.append(node)
+        elif isinstance(node, ast.Name) and node.id in defs:
+            fn = defs[node.id]
+            if id(fn) not in seen:
+                seen.add(id(fn))
+                out.append(fn)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            seen.add(id(node))
+            out.append(node)
+
+    for n in ast.walk(ctx.tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in n.decorator_list:
+                if astutil.resolve_name(dec, ctx.aliases) in _JIT_NAMES \
+                        or _is_jit_call(ctx, dec):
+                    add(n)
+        if not isinstance(n, ast.Call):
+            continue
+        if _is_jit_call(ctx, n):
+            for a in n.args:
+                add(a)              # jax.jit(f) / jax.jit(lambda ...)
+        name = astutil.call_name(n, ctx.aliases)
+        for i in _TRACED_BODY_ARGS.get(name or "", ()):
+            if i < len(n.args):
+                add(n.args[i])
+    return out
+
+
 class TelemetryPurity(Rule):
     id = "telemetry-purity"
     doc = ("float()/.item() host-sync coercions and obs probes (span, "
@@ -73,51 +120,8 @@ class TelemetryPurity(Rule):
            "(engine chunk loop), never inside the traced function.")
 
     def check(self, ctx: FileContext) -> Iterable[Finding]:
-        for body in self._traced_bodies(ctx):
+        for body in traced_bodies(ctx):
             yield from self._check_body(ctx, body)
-
-    # -- traced-body discovery ------------------------------------------
-
-    def _traced_bodies(self, ctx: FileContext) -> List[ast.AST]:
-        defs = {}                       # name -> FunctionDef (same file)
-        for n in ast.walk(ctx.tree):
-            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                defs.setdefault(n.name, n)
-
-        out: List[ast.AST] = []
-        seen: Set[int] = set()
-
-        def add(node: Optional[ast.AST]) -> None:
-            if node is None or id(node) in seen:
-                return
-            if isinstance(node, ast.Lambda):
-                seen.add(id(node))
-                out.append(node)
-            elif isinstance(node, ast.Name) and node.id in defs:
-                fn = defs[node.id]
-                if id(fn) not in seen:
-                    seen.add(id(fn))
-                    out.append(fn)
-            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                seen.add(id(node))
-                out.append(node)
-
-        for n in ast.walk(ctx.tree):
-            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                for dec in n.decorator_list:
-                    if astutil.resolve_name(dec, ctx.aliases) in _JIT_NAMES \
-                            or _is_jit_call(ctx, dec):
-                        add(n)
-            if not isinstance(n, ast.Call):
-                continue
-            if _is_jit_call(ctx, n):
-                for a in n.args:
-                    add(a)              # jax.jit(f) / jax.jit(lambda ...)
-            name = astutil.call_name(n, ctx.aliases)
-            for i in _TRACED_BODY_ARGS.get(name or "", ()):
-                if i < len(n.args):
-                    add(n.args[i])
-        return out
 
     # -- violations inside one traced body ------------------------------
 

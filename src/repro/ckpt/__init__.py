@@ -1,2 +1,4 @@
-from repro.ckpt.checkpoint import (Checkpointer, latest_step, read_meta,
-                                   restore_params, save_params)
+from repro.ckpt.checkpoint import (Checkpointer, CorruptCheckpointError,
+                                   latest_good_step, latest_step, read_meta,
+                                   restore_params, save_params,
+                                   verify_checkpoint)

@@ -13,6 +13,18 @@
 Format: one ``.npz`` with flattened key paths + a JSON sidecar (step,
 metadata, tree structure). bfloat16 leaves are bit-cast to uint16 for
 numpy compatibility and restored exactly.
+
+Crash safety is two layers deep. The tmp+``os.replace`` rename means a
+save killed mid-write never *replaces* a good checkpoint — but the
+directory that was being renamed-to could still be damaged by the
+filesystem itself (torn page, truncated npz, bit rot). So every save also
+records a CRC-32 over the stored array bytes in ``meta.json``
+("checksum"); ``verify_checkpoint`` recomputes it, ``latest_good_step``
+walks the step directories newest-first to the most recent checkpoint
+that verifies, and restores with ``step=None`` resolve through it — a
+resumed run silently falls back to the last good chunk boundary instead
+of crashing (or worse, training on garbage). An explicitly requested
+step that fails verification raises ``CorruptCheckpointError``.
 """
 from __future__ import annotations
 
@@ -21,6 +33,8 @@ import os
 import shutil
 import threading
 import time
+import zipfile
+import zlib
 from typing import Any, Dict, Optional
 
 import jax
@@ -30,6 +44,23 @@ import numpy as np
 Params = Any
 
 _BF16 = "bfloat16"
+
+
+class CorruptCheckpointError(RuntimeError):
+    """An explicitly requested checkpoint failed its content checksum."""
+
+
+def _content_checksum(store: Dict[str, np.ndarray]) -> int:
+    """CRC-32 over the stored (post-bitcast) arrays in sorted key order —
+    key names and shapes included, so a renamed or reshaped leaf is as
+    detectable as flipped payload bytes."""
+    crc = 0
+    for k in sorted(store):
+        a = np.ascontiguousarray(store[k])
+        crc = zlib.crc32(k.encode(), crc)
+        crc = zlib.crc32(repr((a.shape, str(a.dtype))).encode(), crc)
+        crc = zlib.crc32(a.tobytes(), crc)
+    return crc
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -71,6 +102,7 @@ def save_params(ckpt_dir: str, step: int, params: Params,
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump({"step": step, "dtypes": dtypes,
                    "metadata": metadata or {},
+                   "checksum": _content_checksum(store),
                    "time": time.time()}, f)
     if os.path.isdir(final):
         shutil.rmtree(final)
@@ -86,14 +118,50 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def verify_checkpoint(ckpt_dir: str, step: int) -> bool:
+    """True iff step's checkpoint is readable and its stored bytes match
+    the checksum recorded at save time. Checkpoints predating checksums
+    verify as good when readable: os.replace already guarantees they are
+    complete, there is just nothing to compare their bytes against."""
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    try:
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            store = {k: data[k] for k in data.files}
+        if "checksum" not in meta:
+            return True
+        return _content_checksum(store) == int(meta["checksum"])
+    except (OSError, ValueError, KeyError, zlib.error,
+            zipfile.BadZipFile):
+        return False
+
+
+def latest_good_step(ckpt_dir: str) -> Optional[int]:
+    """Newest step whose checkpoint verifies — the fallback walk a resume
+    takes past a corrupted latest checkpoint to the last good chunk
+    boundary."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted((int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                    if d.startswith("step_")), reverse=True)
+    for s in steps:
+        if verify_checkpoint(ckpt_dir, s):
+            return s
+    return None
+
+
 def read_meta(ckpt_dir: str, step: Optional[int] = None) -> dict:
     """Load a checkpoint's meta.json (step, metadata, dtypes) without
     touching the arrays — lets callers decide the restore template (e.g.
-    params-only vs {'params','state'} engine bundles) before restoring."""
+    params-only vs {'params','state'} engine bundles) before restoring.
+    step=None resolves to the latest checkpoint that passes verification
+    (falling back past corrupted saves)."""
     if step is None:
-        step = latest_step(ckpt_dir)
+        step = latest_good_step(ckpt_dir)
         if step is None:
-            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+            raise FileNotFoundError(f"no intact checkpoints under "
+                                    f"{ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step:010d}", "meta.json")
     with open(path) as f:
         return json.load(f)
@@ -104,13 +172,30 @@ def restore_params(ckpt_dir: str, like: Params, step: Optional[int] = None,
     """Restore into the structure of ``like``. ``shardings`` (optional tree
     or single sharding) re-lays leaves onto the current mesh (elastic)."""
     if step is None:
-        step = latest_step(ckpt_dir)
+        step = latest_good_step(ckpt_dir)
         if step is None:
-            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+            raise FileNotFoundError(f"no intact checkpoints under "
+                                    f"{ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step:010d}")
-    with open(os.path.join(path, "meta.json")) as f:
-        meta = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
+    try:
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as npz:
+            data = {k: npz[k] for k in npz.files}
+    except FileNotFoundError:
+        raise
+    except (OSError, ValueError, zlib.error, zipfile.BadZipFile) as e:
+        raise CorruptCheckpointError(
+            f"checkpoint step {step} under {ckpt_dir} is unreadable "
+            f"({e}). Restore with step=None to fall back to the latest "
+            f"good checkpoint.") from e
+    if "checksum" in meta and \
+            _content_checksum(data) != int(meta["checksum"]):
+        raise CorruptCheckpointError(
+            f"checkpoint step {step} under {ckpt_dir} fails its content "
+            f"checksum — bytes on disk do not match what was saved. "
+            f"Restore with step=None to fall back to the latest good "
+            f"checkpoint.")
     keys = _leafkey_order(like)
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]

@@ -12,7 +12,8 @@ from dataclasses import dataclass, field
 from typing import Optional, Tuple, TYPE_CHECKING
 
 if TYPE_CHECKING:                      # annotation-only: configs must not
-    from repro.core.population import ClientPopulation   # import core
+    from repro.core.faults import FaultPlan              # import core
+    from repro.core.population import ClientPopulation
 
 
 @dataclass(frozen=True)
@@ -191,6 +192,15 @@ class SFLConfig:
     # the first-class fleet spec (hashable, jit-static like the rest of
     # this config); None -> single cohort from the scalar shorthands
     population: Optional["ClientPopulation"] = None
+    # fault injection + graceful degradation (core/faults.py): None (or
+    # FaultPlan.none()) keeps the event stream bit-exact with the clean
+    # engine; quorum_timeout > 0 lets a commit proceed with however many
+    # contributions arrived once t + quorum_timeout passes (weights
+    # renormalized — the no-deadlock escape); lost deliveries retransmit
+    # up to max_retries times before the contribution is dropped.
+    faults: Optional["FaultPlan"] = None
+    quorum_timeout: float = 0.0
+    max_retries: int = 3
 
 
 @dataclass(frozen=True)

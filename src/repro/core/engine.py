@@ -507,6 +507,68 @@ class AdaptiveTau:
         return out
 
 
+class AdaptiveQuorum:
+    """Graceful-degradation controller: resize the commit quorum K from
+    observed fault pressure (core/faults.py).
+
+    At each chunk boundary it reads the window's simulator RoundTelemetry
+    records (``SchedWindow.telemetry``) — started dispatches vs.
+    contributions lost to crashes, exhausted retries, checksum drops, and
+    ring evictions — EMA-smooths the observed delivery rate, and re-plans
+    K ≈ ceil(K0 · delivered/started). When a fifth of the fleet's fetches
+    die, holding out for the configured K would push every commit into
+    the quorum_timeout escape; shrinking K to what the fleet can actually
+    fill keeps commits quorum-paced. When delivery recovers the quorum
+    grows back toward its configured value. K is clipped to
+    [k_min, K0] — never above the initial quorum: the ring geometry (and
+    the healthy-state semantics) are sized for K0. ``trace`` records the
+    (round_idx, K) decisions, mirroring AdaptiveTau.
+    """
+
+    def __init__(self, k_min: int = 1, ema: float = 0.5):
+        if k_min < 1:
+            raise ValueError(f"AdaptiveQuorum k_min must be >= 1, "
+                             f"got {k_min}")
+        self.k_min = int(k_min)
+        self.ema = ema
+        self.k0: Optional[int] = None
+        self.rate: Optional[float] = None      # EMA'd delivery rate
+        self.trace: List[Tuple[int, int]] = []
+
+    def bind(self, sfl) -> None:
+        if self.k0 is None:
+            if sfl.quorum <= 0:
+                raise ValueError(
+                    "AdaptiveQuorum needs a finite initial quorum "
+                    "(sfl.quorum > 0): K0 anchors the [k_min, K0] range")
+            self.k0 = int(sfl.quorum)
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"k0": self.k0, "rate": self.rate}
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        self.k0 = d.get("k0")
+        self.rate = d.get("rate")
+
+    def update(self, round_idx, window, metrics):
+        if window is None or self.k0 is None:
+            return {}
+        recs = [r for r in getattr(window, "telemetry", ()) or ()
+                if r.source == "sim"]
+        started = sum(r.started for r in recs)
+        if not started:                  # no sink, or a zero-fault window
+            return {}                    # with no dispatch accounting
+        dropped = sum(r.crashed + r.lost + r.corrupt + r.evicted
+                      for r in recs)
+        obs = max(0.0, 1.0 - dropped / started)
+        self.rate = (obs if self.rate is None
+                     else self.ema * obs + (1.0 - self.ema) * self.rate)
+        k = int(np.clip(int(np.ceil(self.k0 * self.rate)),
+                        self.k_min, self.k0))
+        self.trace.append((round_idx, k))
+        return {"quorum": k}
+
+
 # ---------------------------------------------------------------------------
 # the fused multi-round driver
 # ---------------------------------------------------------------------------
@@ -741,6 +803,7 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                chunk_callback: Optional[Callable] = None,
                controller: Optional[Controller] = None,
                tau_history: Optional[List[int]] = None,
+               quorum_history: Optional[List[int]] = None,
                batch_subset_fn: Optional[Callable] = None,
                batch_put: Optional[Callable] = None,
                telemetry: Optional[TelemetrySink] = None,
@@ -793,13 +856,22 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
     window's records via SchedWindow.telemetry. With telemetry=None
     (default) no clock reads or extra syncs happen on the hot path.
 
+    ``sfl.faults`` (a core/faults.py FaultPlan) perturbs the async event
+    stream — crash-after-fetch, lossy delivery with up to
+    ``sfl.max_retries`` retransmissions, duplication, checksum-dropped
+    corruption — and ``sfl.quorum_timeout`` caps how long a commit waits
+    for its quorum before proceeding with whatever arrived (weights
+    renormalized). None / FaultPlan.none() is bit-exact with the clean
+    engine. AdaptiveQuorum (with a telemetry sink) shrinks/grows the
+    commit quorum from the observed delivery rate.
+
     Checkpoints save at step = round index of the last completed round in
     the chunk (stateful algorithms bundle their engine state — see
     restore_run); resume via restore_run and start_round=step+1. Async
-    controller runs additionally record the per-version τ trace in the
-    checkpoint metadata ('tau_per_version'): pass it back as
-    ``tau_history`` on resume so the timeline prefix recompiles with the
-    τ that actually executed.
+    controller runs additionally record the per-version τ / quorum traces
+    in the checkpoint metadata ('tau_per_version' / 'quorum_per_version'):
+    pass them back as ``tau_history`` / ``quorum_history`` on resume so
+    the timeline prefix recompiles with the values that actually executed.
     """
     algo = get_algorithm(algorithm, **algo_opts)
     if mode not in ("scan", "python", "async"):
@@ -858,6 +930,12 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
     timeline: Optional[events.Timeline] = None
     stream: Optional[events.TimelineStream] = None
     qwaits: Optional[np.ndarray] = None
+    # fault / degradation counter columns surfaced to RoundTelemetry —
+    # sparse fills fcounts from the streamed rows; dense reads the
+    # compiled timeline's (V,) columns directly (no ring -> no evictions)
+    fault_cols = ("started", "evicted", "crashed", "lost", "corrupt",
+                  "dups", "retries", "timeouts")
+    fcounts: Optional[np.ndarray] = None
     if mode == "async":
         # compile the semi-async event timeline for the WHOLE run (from
         # version 0, so a resumed run sees the identical prefix and slices
@@ -873,6 +951,13 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
         if tau_history is not None:
             h = np.asarray(tau_history, np.int64)[:rounds]
             taus_v[:len(h)] = h
+        # per-version quorum, same replay contract as taus_v: resume must
+        # recompile the prefix with the K that actually committed
+        # (checkpoint metadata 'quorum_per_version' -> quorum_history)
+        quorums_v = np.full(rounds, sfl.quorum, np.int64)
+        if quorum_history is not None:
+            h = np.asarray(quorum_history, np.int64)[:rounds]
+            quorums_v[:len(h)] = h
         if sparse:
             # streaming timeline: no (V, M) rows, no (V, ·) precompute.
             # The DES streams (C, k_max) commit batches chunk-by-chunk;
@@ -895,7 +980,10 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                     sched_eff, rounds, quorum=sfl.quorum,
                     discount=sfl.staleness_discount, taus=taus_v,
                     k_max=k_geo, capacity=cap_geo,
-                    mask_row_fn=_mask_row_at)
+                    mask_row_fn=_mask_row_at, quorums=quorums_v,
+                    faults=sfl.faults,
+                    quorum_timeout=sfl.quorum_timeout,
+                    max_retries=sfl.max_retries)
                 st.skip(skip_to)
                 return st
 
@@ -903,14 +991,17 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
             masks = np.zeros((n_run, k_geo), np.float32)
             round_times = np.zeros(n_run, np.float64)
             qwaits = np.zeros(n_run, np.float64)
+            fcounts = np.zeros((n_run, len(fault_cols)), np.int64)
         else:
             amask_rows = np.stack([sched_eff.masks[v % R]
                                    for v in range(rounds)])
             with span("engine.compile_timeline", versions=rounds):
                 timeline = events.compile_timeline(
-                    sched_eff, rounds, quorum=sfl.quorum,
+                    sched_eff, rounds, quorum=quorums_v,
                     discount=sfl.staleness_discount, tau=taus_v,
-                    mask_rows=amask_rows)
+                    mask_rows=amask_rows, faults=sfl.faults,
+                    quorum_timeout=sfl.quorum_timeout,
+                    max_retries=sfl.max_retries)
             masks = timeline.apply_w[start_round:rounds].copy()
             start_masks = timeline.start_mask[start_round:rounds].copy()
             round_times = timeline.durations[start_round:rounds].copy()
@@ -948,9 +1039,11 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
             if hasattr(controller, "state_dict"):
                 md["controller_state"] = controller.state_dict()
             if mode == "async":
-                # per-version τ trace: resume must recompile the timeline
-                # prefix with the τ that actually executed (tau_history)
+                # per-version τ / K traces: resume must recompile the
+                # timeline prefix with the values that actually executed
+                # (tau_history / quorum_history)
                 md["tau_per_version"] = [int(t) for t in taus_v]
+                md["quorum_per_version"] = [int(q) for q in quorums_v]
         return md
 
     def seg_info(r0, r1):
@@ -985,15 +1078,22 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
         # carries (the bit-consistency gate in tests/test_obs.py), quorum
         # waits the same rows the controller window reads
         i0, i1 = r0 - start_round, r1 - start_round
+        counts: Dict[str, int] = {}
         if mode != "async":
             qw = None
         elif sparse:
             qw = qwaits[i0:i1].copy()
+            counts = {f: int(fcounts[i0:i1, j].sum())
+                      for j, f in enumerate(fault_cols)}
         else:
             qw = timeline.quorum_wait[r0:r1].copy()
+            for f in fault_cols:
+                col = getattr(timeline, f, None)
+                if col is not None:
+                    counts[f] = int(col[r0:r1].sum())
         telemetry.emit(RoundTelemetry(
             r0, r1, "sim", mode, round_times[i0:i1].copy(), quorum_wait=qw,
-            cohort_arrival=_cohort_arrival(r0, r1)))
+            cohort_arrival=_cohort_arrival(r0, r1), **counts))
 
     def flush(mets, r0, r1):
         nonlocal last_info
@@ -1038,6 +1138,20 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
         changed = {k: v for k, v in upd.items() if getattr(sfl, k) != v}
         if not changed:
             return
+        if mode == "async" and "staleness_discount" in changed:
+            raise ValueError(
+                "controllers cannot override staleness_discount mid-run: "
+                "already-applied records carry its weights, so the "
+                "timeline is not prefix-stable under that change")
+        if sparse and "quorum" in changed:
+            # the ring geometry was resolved from the INITIAL config and
+            # is baked into the store / staged-row shapes; pin the
+            # resolved values so the new quorum cannot re-derive a
+            # different k_max/capacity under the auto (0) knobs
+            if sfl.k_max != k_geo:
+                changed["k_max"] = k_geo
+            if sfl.ring_capacity != cap_geo:
+                changed["ring_capacity"] = cap_geo
         applied.update(changed)
         sfl = dataclasses.replace(sfl, **changed)
         i = r0 - start_round
@@ -1058,13 +1172,11 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                 for j, rr in enumerate(rows[i:], start=i):
                     masks[j] = mask_of(sched_eff, rr)
         if mode == "async":
-            if {"quorum", "staleness_discount"} & set(changed):
-                raise ValueError(
-                    "controllers cannot override quorum/staleness_discount "
-                    "mid-run: the timeline is only prefix-stable under "
-                    "piecewise tau/deadline changes")
-            if {"tau", "deadline"} & set(changed):
+            if {"tau", "deadline", "quorum"} & set(changed):
+                # piecewise knob change: versions >= r0 take the new
+                # values, the executed prefix keeps what it ran with
                 taus_v[r0:] = sfl.tau
+                quorums_v[r0:] = sfl.quorum
                 if sparse:
                     # rebuild the stream and replay the (prefix-stable)
                     # DES to r0 — already-flushed rows are untouched and
@@ -1075,9 +1187,11 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                         [sched_eff.masks[v % R]
                          for v in range(r0, rounds)])
                     timeline = events.compile_timeline(
-                        sched_eff, rounds, quorum=sfl.quorum,
+                        sched_eff, rounds, quorum=quorums_v,
                         discount=sfl.staleness_discount, tau=taus_v,
-                        mask_rows=amask_rows)
+                        mask_rows=amask_rows, faults=sfl.faults,
+                        quorum_timeout=sfl.quorum_timeout,
+                        max_retries=sfl.max_retries)
                     masks[i:] = timeline.apply_w[r0:rounds]
                     start_masks[i:] = timeline.start_mask[r0:rounds]
                     round_times[i:] = timeline.durations[r0:rounds]
@@ -1155,6 +1269,8 @@ def run_rounds(algorithm: Union[str, Algorithm], cfg: ModelConfig,
                 masks[i:i + C] = rows_c.apply_w
                 round_times[i:i + C] = rows_c.durations
                 qwaits[i:i + C] = rows_c.quorum_wait
+                for j, f in enumerate(fault_cols):
+                    fcounts[i:i + C, j] = getattr(rows_c, f)
                 with span("engine.stage", start=r0, stop=r1):
                     staged = _stack_sparse_chunk(
                         batch_fn, r0, rows_c.start_client,

@@ -72,6 +72,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, SFLConfig
 from repro.core import zo
+from repro.core.faults import (OUT_CORRUPT, OUT_CRASH, OUT_DELIVER,
+                               OUT_LOST, STALE_CORRUPT, STALE_CRASH,
+                               STALE_LOST, FaultPlan, ResolvedFaults)
 from repro.obs.trace import span
 from repro.core.population import AvailRow
 from repro.core.splitfed import _client_round
@@ -83,7 +86,36 @@ __all__ = ["Timeline", "compile_timeline", "quorum_round_time",
            "init_store", "resize_store", "async_mu_splitfed_step",
            "SparseRows", "SparseTimeline", "TimelineStream",
            "compile_sparse_timeline", "resolve_store_geometry",
-           "async_mu_splitfed_sparse_step"]
+           "async_mu_splitfed_sparse_step", "QuorumStallError"]
+
+
+class QuorumStallError(ValueError):
+    """A version's quorum can never fill and no quorum_timeout is set."""
+
+
+def _resolve_faults(schedule, faults) -> Optional[ResolvedFaults]:
+    """FaultPlan -> per-client rates keyed on the schedule's seed; None
+    (or an inert plan) -> None, so callers can gate every fault branch on
+    a single ``is not None`` and the zero-fault path stays byte-identical."""
+    if faults is None:
+        return None
+    if isinstance(faults, ResolvedFaults):
+        return faults
+    if not faults.any():
+        return None
+    return faults.resolve(schedule.n_clients,
+                          getattr(schedule, "population", None),
+                          getattr(schedule, "seed", 0))
+
+
+def _stall_error(v: int, n_deliverable: int, quorum: int) -> QuorumStallError:
+    return QuorumStallError(
+        f"quorum stall at version {v}: only {n_deliverable} deliverable "
+        f"contribution(s) pending against quorum={quorum} under an active "
+        "fault plan — the commit would silently under-fill forever. Set "
+        "quorum_timeout (SFLConfig.quorum_timeout / --quorum-timeout) to "
+        "commit with whatever arrived by the deadline, or lower the "
+        "quorum/fault rates.")
 
 
 # ---------------------------------------------------------------------------
@@ -137,6 +169,16 @@ class Timeline:
     quorum: int
     discount: float
     tau_per_version: np.ndarray
+    # fault / degradation accounting, all (V,) — zero everywhere when the
+    # run had no FaultPlan (started == dispatches incl. faulted fetches;
+    # timeouts flags commits forced by the quorum_timeout deadline)
+    started: Optional[np.ndarray] = None
+    crashed: Optional[np.ndarray] = None
+    lost: Optional[np.ndarray] = None
+    corrupt: Optional[np.ndarray] = None
+    dups: Optional[np.ndarray] = None
+    retries: Optional[np.ndarray] = None
+    timeouts: Optional[np.ndarray] = None
 
     @property
     def n_versions(self) -> int:
@@ -151,15 +193,19 @@ class Timeline:
         return self.arrival_time.shape[0]
 
 
-def compile_timeline(schedule, n_versions: int, *, quorum: int = 0,
+def compile_timeline(schedule, n_versions: int, *, quorum=0,
                      discount: float = 1.0, tau=1,
-                     mask_rows: Optional[np.ndarray] = None) -> Timeline:
+                     mask_rows: Optional[np.ndarray] = None,
+                     faults=None, quorum_timeout: float = 0.0,
+                     max_retries: int = 3) -> Timeline:
     """Compile ``n_versions`` semi-async server versions from a Schedule.
 
     quorum    K: commit as soon as K of the pending contributions have
               arrived (K<=0 or K>=pending: wait for all — the sync
               barrier). A commit folds in *everything* delivered by the
               commit moment, quorum members and opportunistic extras alike.
+              Scalar, or a (n_versions,) array for controller-driven
+              piecewise-quorum runs (AdaptiveQuorum).
     discount  staleness weight base: a contribution applied s commits after
               its fetch weighs discount**s before per-commit normalization
               (discount 1.0 = stale and fresh weigh equally).
@@ -169,10 +215,23 @@ def compile_timeline(schedule, n_versions: int, *, quorum: int = 0,
     mask_rows optional (n_versions, M) availability override; defaults to
               the schedule's masks rows (cyclic). Used by the engine when a
               controller re-derives deadline drops mid-run.
+    faults    FaultPlan (or pre-resolved ResolvedFaults) perturbing the
+              event stream — crash-after-fetch, lossy delivery with up to
+              ``max_retries`` retransmissions, duplication (deduped by
+              (client, round_of_origin) — one in-flight record per client),
+              checksum-dropped corruption. None / inert plan: the code
+              path below is byte-identical to the pre-fault engine.
+    quorum_timeout  graceful-degradation deadline: a commit with a quorum
+              that hasn't filled by ``t + quorum_timeout`` proceeds with
+              however many contributions arrived (weights renormalized —
+              never deadlocks). With faults active, an under-fillable
+              quorum and no timeout raises QuorumStallError instead of
+              silently committing thin versions forever.
 
     Deterministic in its inputs (the schedule already froze every random
-    draw), and prefix-stable: two compilations agreeing on the first v
-    versions of (tau, mask_rows) agree on the first v rows of every output
+    draw; fault draws are counter-hashed on (seed, lane, version, client)),
+    and prefix-stable: two compilations agreeing on the first v versions
+    of (tau, quorum, mask_rows) agree on the first v rows of every output
     — which is what lets a controller recompile the future without
     rewriting the past.
     """
@@ -182,6 +241,11 @@ def compile_timeline(schedule, n_versions: int, *, quorum: int = 0,
         np.asarray(tau, np.int64)
     if taus.shape != (V,):
         raise ValueError(f"tau_per_version shape {taus.shape} != ({V},)")
+    quorums = np.full(V, quorum, np.int64) if np.ndim(quorum) == 0 else \
+        np.asarray(quorum, np.int64)
+    if quorums.shape != (V,):
+        raise ValueError(
+            f"quorum_per_version shape {quorums.shape} != ({V},)")
     if mask_rows is None:
         mask_rows = (np.stack([schedule.masks[v % R] for v in range(V)])
                      if V else np.zeros((0, M), np.float32))
@@ -194,6 +258,7 @@ def compile_timeline(schedule, n_versions: int, *, quorum: int = 0,
     cohorts = (schedule.population.cohort_ids()
                if getattr(schedule, "population", None) is not None
                else np.zeros(M, np.int64))
+    rf = _resolve_faults(schedule, faults)
 
     start_mask = np.zeros((V, M), np.float32)
     apply_w = np.zeros((V, M), np.float32)
@@ -202,20 +267,75 @@ def compile_timeline(schedule, n_versions: int, *, quorum: int = 0,
     durations = np.zeros(V, np.float64)
     quorum_wait = np.zeros(V, np.float64)
     applied_n = np.zeros(V, np.int64)
+    started_n = np.zeros(V, np.int64)
+    crashed_n = np.zeros(V, np.int64)
+    lost_n = np.zeros(V, np.int64)
+    corrupt_n = np.zeros(V, np.int64)
+    dup_n = np.zeros(V, np.int64)
+    retry_n = np.zeros(V, np.int64)
+    timeout_n = np.zeros(V, np.int64)
     events = []                       # (arrival, client, origin, stale, commit)
 
     t = 0.0
     pending: Dict[int, Tuple[float, int]] = {}   # client -> (arrival, origin)
+    recovering: Dict[int, float] = {}   # crashed/dropped client -> idle time
+    streaks = np.zeros(M, np.int64) if rf is not None else None
     for v in range(V):
+        if rf is not None and recovering:
+            for m in [m for m, rdy in recovering.items() if rdy <= t]:
+                del recovering[m]
         # broadcast: every idle client on this version's mask fetches the
         # just-committed params and starts a fresh contribution
-        for m in range(M):
-            if mask_rows[v, m] > 0 and m not in pending:
-                pending[m] = (t + schedule.delays[v % R, m] + comm[m], v)
-                start_mask[v, m] = 1.0
+        if rf is None:
+            for m in range(M):
+                if mask_rows[v, m] > 0 and m not in pending:
+                    pending[m] = (t + schedule.delays[v % R, m] + comm[m], v)
+                    start_mask[v, m] = 1.0
+        else:
+            starters = [m for m in range(M)
+                        if mask_rows[v, m] > 0 and m not in pending
+                        and m not in recovering]
+            started_n[v] = len(starters)
+            if starters:
+                sids = np.asarray(starters, np.int64)
+                f = rf.dispatch_fates(v, sids, t,
+                                      schedule.delays[v % R, sids],
+                                      comm[sids], streaks, max_retries)
+                retry_n[v] = int(f["retries"].sum())
+                dup_n[v] = int(f["dup"].sum())
+                for j, m in enumerate(starters):
+                    out = int(f["outcome"][j])
+                    if out == OUT_DELIVER:
+                        pending[m] = (float(f["arrival"][j]), v)
+                        start_mask[v, m] = 1.0
+                        streaks[m] = 0
+                        continue
+                    recovering[m] = float(f["ready"][j])
+                    if out == OUT_CRASH:
+                        streaks[m] += 1
+                        crashed_n[v] += 1
+                        events.append((t, m, v, STALE_CRASH, -1))
+                    elif out == OUT_LOST:
+                        streaks[m] = 0
+                        lost_n[v] += 1
+                        events.append((float(f["ready"][j]), m, v,
+                                       STALE_LOST, -1))
+                    else:                      # corrupt: checksum drop
+                        streaks[m] = 0
+                        corrupt_n[v] += 1
+                        events.append((float(f["arrival"][j]), m, v,
+                                       STALE_CORRUPT, -1))
+        q_req = int(quorums[v])
         arrivals = sorted(a for a, _ in pending.values())
-        k = len(arrivals) if quorum <= 0 else min(quorum, len(arrivals))
+        k = len(arrivals) if q_req <= 0 else min(q_req, len(arrivals))
         q_arrival = arrivals[k - 1] if k else t
+        if q_req > 0 and quorum_timeout > 0:
+            deadline = t + quorum_timeout
+            if len(arrivals) < q_req or q_arrival > deadline:
+                q_arrival = deadline            # degrade: commit what came
+                timeout_n[v] = 1
+        elif rf is not None and q_req > 0 and len(arrivals) < q_req:
+            raise _stall_error(v, len(arrivals), q_req)
         quorum_wait[v] = max(q_arrival - t, 0.0)
         c_time = max(q_arrival, t + float(taus[v]) * schedule.t_server)
         # fold in everything delivered by the commit moment
@@ -236,6 +356,8 @@ def compile_timeline(schedule, n_versions: int, *, quorum: int = 0,
         commit_times[v] = c_time
         durations[v] = c_time - t
         t = c_time
+    if rf is None:
+        started_n = start_mask.sum(axis=1).astype(np.int64)
     # contributions still in flight at the horizon: delivered to nobody
     for m in sorted(pending):
         arr, origin = pending[m]
@@ -255,7 +377,11 @@ def compile_timeline(schedule, n_versions: int, *, quorum: int = 0,
         start_mask=start_mask, apply_w=apply_w, staleness_m=staleness_m,
         commit_times=commit_times, durations=durations,
         quorum_wait=quorum_wait, applied=applied_n,
-        quorum=int(quorum), discount=float(discount), tau_per_version=taus)
+        quorum=int(quorums[0]) if V else
+        (0 if np.ndim(quorum) else int(quorum)),
+        discount=float(discount), tau_per_version=taus,
+        started=started_n, crashed=crashed_n, lost=lost_n,
+        corrupt=corrupt_n, dups=dup_n, retries=retry_n, timeouts=timeout_n)
 
 
 def quorum_round_time(delays: np.ndarray, mask: np.ndarray, t_server: float,
@@ -459,6 +585,16 @@ class _VStep(NamedTuple):
     quorum_wait: float
     evicted: int
     skipped: int
+    # fault accounting (all zero on the zero-fault path); ``started``
+    # counts every dispatch including faulted fetches, so
+    # started == len(start_clients) + crashed + lost + corrupt
+    started: int = 0
+    crashed: int = 0
+    lost: int = 0
+    corrupt: int = 0
+    dups: int = 0
+    retries: int = 0
+    timed_out: int = 0
 
 
 class _EventSim:
@@ -486,7 +622,9 @@ class _EventSim:
     def __init__(self, n_clients: int, comm: np.ndarray, t_server: float,
                  *, quorum: int, discount: float, k_max: int,
                  capacity: int, collect_events: bool = False,
-                 cohort_bounds: Optional[Sequence[Tuple[int, int]]] = None):
+                 cohort_bounds: Optional[Sequence[Tuple[int, int]]] = None,
+                 faults: Optional[ResolvedFaults] = None,
+                 quorum_timeout: float = 0.0, max_retries: int = 3):
         self.M = int(n_clients)
         self.comm = np.asarray(comm, np.float64)
         self.t_server = float(t_server)
@@ -494,6 +632,9 @@ class _EventSim:
         self.discount = float(discount)
         self.k_max = int(k_max)
         self.capacity = int(capacity)
+        self.quorum_timeout = float(quorum_timeout)
+        self.max_retries = int(max_retries)
+        self.faults = faults
         self.t = 0.0
         self.v = 0
         self._ord = 0
@@ -505,11 +646,27 @@ class _EventSim:
         self.busy = np.zeros(self.M, bool)
         self.idle = _CohortIdleIndex(cohort_bounds or [(0, self.M)])
         self._finished: List[int] = []  # drops awaiting the per-step flush
+        if faults is not None:
+            # crashed/dropped clients parked until their re-dispatch time,
+            # and per-client consecutive-crash streaks (backoff exponent)
+            self._recovering: List[Tuple[float, int]] = []
+            self._streaks = np.zeros(self.M, np.int64)
         self.events: Optional[List[Tuple[float, int, int, int, int]]] = \
             [] if collect_events else None
 
-    def step(self, delay_row, mask_row, tau: int) -> _VStep:
+    def step(self, delay_row, mask_row, tau: int,
+             quorum: Optional[int] = None) -> _VStep:
         t, v = self.t, self.v
+        rf = self.faults
+        if rf is not None and self._recovering:
+            # fault-freed clients whose backoff/drop time has passed
+            # re-enter the idle index before this broadcast
+            rec, freed = self._recovering, []
+            while rec and rec[0][0] <= t:
+                freed.append(heapq.heappop(rec)[1])
+            if freed:
+                self.busy[np.asarray(freed, np.int64)] = False
+                self.idle.finish_batch(freed)
         # broadcast: idle clients on the mask fetch and start, in client-id
         # order (the dense compiler's iteration order), admitted up to the
         # k_max batch width; the rest are skipped, not deferred — they may
@@ -521,9 +678,45 @@ class _EventSim:
         adm = np.asarray(admitted, np.int64)
         delays = (np.asarray(delay_row(adm), np.float64) if callable(delay_row)
                   else np.asarray(delay_row)[adm])
-        arrs = t + delays + self.comm[adm]
         self.busy[adm] = True           # evictions below re-clear theirs
         self.idle.start_batch(admitted)
+        n_started = len(admitted)
+        crashed = lost = corrupt = dups = retries = 0
+        if rf is not None and n_started:
+            f = rf.dispatch_fates(v, adm, t, delays, self.comm[adm],
+                                  self._streaks, self.max_retries)
+            out = f["outcome"]
+            dups = int(f["dup"].sum())
+            retries = int(f["retries"].sum())
+            crashed = int((out == OUT_CRASH).sum())
+            lost = int((out == OUT_LOST).sum())
+            corrupt = int((out == OUT_CORRUPT).sum())
+            self._streaks[adm[out != OUT_CRASH]] = 0
+            if crashed or lost or corrupt:
+                self._streaks[adm[out == OUT_CRASH]] += 1
+                for j in np.flatnonzero(out != OUT_DELIVER).tolist():
+                    m = int(adm[j])
+                    # stays busy (no slot) until its re-dispatch time
+                    heapq.heappush(self._recovering,
+                                   (float(f["ready"][j]), m))
+                    if self.events is not None:
+                        o = int(out[j])
+                        if o == OUT_CRASH:
+                            self.events.append((t, m, v, STALE_CRASH, -1))
+                        elif o == OUT_LOST:
+                            self.events.append((float(f["ready"][j]), m, v,
+                                                STALE_LOST, -1))
+                        else:
+                            self.events.append((float(f["arrival"][j]), m,
+                                                v, STALE_CORRUPT, -1))
+                keep = out == OUT_DELIVER
+                adm = adm[keep]
+                admitted = adm.tolist()
+                arrs = f["arrival"][keep]
+            else:
+                arrs = f["arrival"]
+        else:
+            arrs = t + delays + self.comm[adm]
         n_admit = len(admitted)
         free_idx = np.flatnonzero(self.slot_client < 0)
         evicted = 0
@@ -569,16 +762,25 @@ class _EventSim:
         # quorum: the k earliest pending arrivals, ties broken by client id
         # (the arrival heap's pop order) — one lexsort over <= capacity
         # slots; the k-th is the quorum arrival
+        q_req = self.quorum if quorum is None else int(quorum)
         valid_idx = np.flatnonzero(self.slot_client >= 0)
         n_pend = valid_idx.size
-        k = n_pend if self.quorum <= 0 else min(self.quorum, n_pend)
+        k = n_pend if q_req <= 0 else min(q_req, n_pend)
         if n_pend:
             va = self.slot_arr[valid_idx]
             order = np.lexsort((self.slot_client[valid_idx], va))
             sorted_slots = valid_idx[order]
             sa = va[order]
         q_arrival = float(sa[k - 1]) if k > 0 else t
-        quorum_wait = max(q_arrival - t, 0.0) if k > 0 else 0.0
+        timed_out = 0
+        if q_req > 0 and self.quorum_timeout > 0:
+            deadline = t + self.quorum_timeout
+            if n_pend < q_req or q_arrival > deadline:
+                q_arrival = deadline            # degrade: commit what came
+                timed_out = 1
+        elif rf is not None and q_req > 0 and n_pend < q_req:
+            raise _stall_error(v, n_pend, q_req)
+        quorum_wait = max(q_arrival - t, 0.0) if (k > 0 or timed_out) else 0.0
         c_time = max(q_arrival, t + float(tau) * self.t_server)
         # opportunistic extras: everything else delivered by the commit,
         # up to the k_max batch width; overflow past the width (possible
@@ -618,7 +820,9 @@ class _EventSim:
             apply_slots=take.tolist(),
             apply_stales=stales.tolist(), apply_ws=ws_arr.tolist(),
             commit_time=c_time, duration=c_time - t,
-            quorum_wait=quorum_wait, evicted=evicted, skipped=skipped)
+            quorum_wait=quorum_wait, evicted=evicted, skipped=skipped,
+            started=n_started, crashed=crashed, lost=lost, corrupt=corrupt,
+            dups=dups, retries=retries, timed_out=timed_out)
 
     def finalize_events(self) -> List[Tuple[float, int, int, int, int]]:
         """Contributions still in flight at the horizon (delivered to
@@ -652,9 +856,16 @@ class SparseRows(NamedTuple):
     durations: np.ndarray        # (C,) f64
     quorum_wait: np.ndarray      # (C,) f64
     applied: np.ndarray          # (C,) i64
-    started: np.ndarray          # (C,) i64
+    started: np.ndarray          # (C,) i64  dispatches incl. faulted
     evicted: np.ndarray          # (C,) i64
     skipped: np.ndarray          # (C,) i64
+    # fault accounting (zero on the zero-fault path)
+    crashed: np.ndarray = np.zeros(0, np.int64)    # (C,) i64
+    lost: np.ndarray = np.zeros(0, np.int64)       # (C,) i64
+    corrupt: np.ndarray = np.zeros(0, np.int64)    # (C,) i64
+    dups: np.ndarray = np.zeros(0, np.int64)       # (C,) i64
+    retries: np.ndarray = np.zeros(0, np.int64)    # (C,) i64
+    timeouts: np.ndarray = np.zeros(0, np.int64)   # (C,) i64
 
 
 def _pack_rows(steps: Sequence[_VStep], k_start: int, k_apply: int,
@@ -682,9 +893,15 @@ def _pack_rows(steps: Sequence[_VStep], k_start: int, k_apply: int,
         durations=np.array([s.duration for s in steps], np.float64),
         quorum_wait=np.array([s.quorum_wait for s in steps], np.float64),
         applied=np.array([len(s.apply_clients) for s in steps], np.int64),
-        started=np.array([len(s.start_clients) for s in steps], np.int64),
+        started=np.array([s.started for s in steps], np.int64),
         evicted=np.array([s.evicted for s in steps], np.int64),
-        skipped=np.array([s.skipped for s in steps], np.int64))
+        skipped=np.array([s.skipped for s in steps], np.int64),
+        crashed=np.array([s.crashed for s in steps], np.int64),
+        lost=np.array([s.lost for s in steps], np.int64),
+        corrupt=np.array([s.corrupt for s in steps], np.int64),
+        dups=np.array([s.dups for s in steps], np.int64),
+        retries=np.array([s.retries for s in steps], np.int64),
+        timeouts=np.array([s.timed_out for s in steps], np.int64))
 
 
 def _comm_of(schedule) -> np.ndarray:
@@ -726,7 +943,9 @@ class TimelineStream:
     def __init__(self, schedule, n_versions: int, *, quorum: int,
                  discount: float, taus, k_max: int, capacity: int,
                  mask_row_fn: Optional[Callable[[int], np.ndarray]] = None,
-                 collect_events: bool = False):
+                 collect_events: bool = False, quorums=None,
+                 faults=None, quorum_timeout: float = 0.0,
+                 max_retries: int = 3):
         self.schedule = schedule
         self.R, self.M = schedule.n_rounds, schedule.n_clients
         self._lazy = not hasattr(schedule, "masks")
@@ -736,6 +955,14 @@ class TimelineStream:
         if self.taus.shape != (self.n_versions,):
             raise ValueError(
                 f"taus shape {self.taus.shape} != ({self.n_versions},)")
+        # per-version quorum — a live array like taus (AdaptiveQuorum
+        # mutates versions not yet taken); None = the scalar everywhere
+        self.quorums = (np.full(self.n_versions, quorum, np.int64)
+                        if quorums is None else np.asarray(quorums, np.int64))
+        if self.quorums.shape != (self.n_versions,):
+            raise ValueError(
+                f"quorums shape {self.quorums.shape} != "
+                f"({self.n_versions},)")
         self.k_max = int(k_max)
         self.capacity = int(capacity)
         self.mask_row_fn = mask_row_fn
@@ -743,7 +970,9 @@ class TimelineStream:
             self.M, _comm_of(schedule), schedule.t_server, quorum=quorum,
             discount=discount, k_max=k_max, capacity=capacity,
             collect_events=collect_events,
-            cohort_bounds=_cohort_bounds_of(schedule))
+            cohort_bounds=_cohort_bounds_of(schedule),
+            faults=_resolve_faults(schedule, faults),
+            quorum_timeout=quorum_timeout, max_retries=max_retries)
 
     @property
     def v(self) -> int:
@@ -762,7 +991,8 @@ class TimelineStream:
             mask = (self.mask_row_fn(v) if self.mask_row_fn is not None
                     else self.schedule.masks[r])
             delays = self.schedule.delays[r]
-        return self.sim.step(delays, mask, int(self.taus[v]))
+        return self.sim.step(delays, mask, int(self.taus[v]),
+                             quorum=int(self.quorums[v]))
 
     def skip(self, n: int) -> None:
         for _ in range(int(n)):
@@ -825,15 +1055,21 @@ class SparseTimeline:
             commit_times=r.commit_times, durations=r.durations,
             quorum_wait=r.quorum_wait, applied=r.applied,
             quorum=self.quorum, discount=self.discount,
-            tau_per_version=self.tau_per_version)
+            tau_per_version=self.tau_per_version,
+            started=r.started, crashed=r.crashed, lost=r.lost,
+            corrupt=r.corrupt, dups=r.dups, retries=r.retries,
+            timeouts=r.timeouts)
 
 
-def compile_sparse_timeline(schedule, n_versions: int, *, quorum: int = 0,
+def compile_sparse_timeline(schedule, n_versions: int, *, quorum=0,
                             discount: float = 1.0, tau=1,
                             mask_rows: Optional[np.ndarray] = None,
                             k_max: Optional[int] = None,
-                            capacity: Optional[int] = None) -> SparseTimeline:
-    """Sparse counterpart of compile_timeline — same knobs, heap DES,
+                            capacity: Optional[int] = None,
+                            faults=None, quorum_timeout: float = 0.0,
+                            max_retries: int = 3) -> SparseTimeline:
+    """Sparse counterpart of compile_timeline — same knobs (faults,
+    quorum_timeout and per-version quorum arrays included), heap DES,
     (V, K) rows. k_max/capacity None = M (no truncation, no eviction:
     densify() reproduces the dense compiler exactly). Row widths are the
     realized maxima when k_max is None, else k_max."""
@@ -843,6 +1079,11 @@ def compile_sparse_timeline(schedule, n_versions: int, *, quorum: int = 0,
         np.asarray(tau, np.int64)
     if taus.shape != (V,):
         raise ValueError(f"tau_per_version shape {taus.shape} != ({V},)")
+    quorums = np.full(V, quorum, np.int64) if np.ndim(quorum) == 0 else \
+        np.asarray(quorum, np.int64)
+    if quorums.shape != (V,):
+        raise ValueError(
+            f"quorum_per_version shape {quorums.shape} != ({V},)")
     if mask_rows is not None:
         mask_rows = np.asarray(mask_rows, np.float32)
         if mask_rows.shape != (V, M):
@@ -851,17 +1092,20 @@ def compile_sparse_timeline(schedule, n_versions: int, *, quorum: int = 0,
     exact = k_max is None
     k = M if exact else int(k_max)
     cap = M if capacity is None else int(capacity)
-    sim = _EventSim(M, _comm_of(schedule), schedule.t_server, quorum=quorum,
+    sim = _EventSim(M, _comm_of(schedule), schedule.t_server,
+                    quorum=int(quorums[0]) if V else 0,
                     discount=discount, k_max=k, capacity=cap,
                     collect_events=True,
-                    cohort_bounds=_cohort_bounds_of(schedule))
+                    cohort_bounds=_cohort_bounds_of(schedule),
+                    faults=_resolve_faults(schedule, faults),
+                    quorum_timeout=quorum_timeout, max_retries=max_retries)
     steps = []
     with span("events.compile_sparse_timeline", versions=V, clients=M):
         for v in range(V):
             mask = mask_rows[v] if mask_rows is not None \
                 else schedule.masks[v % R]
             steps.append(sim.step(schedule.delays[v % R], mask,
-                                  int(taus[v])))
+                                  int(taus[v]), quorum=int(quorums[v])))
     if exact:
         k_start = max([1] + [len(s.start_clients) for s in steps])
         k_apply = max([1] + [len(s.apply_clients) for s in steps])
@@ -882,7 +1126,9 @@ def compile_sparse_timeline(schedule, n_versions: int, *, quorum: int = 0,
         round_of_origin=ev[:, 2].astype(np.int64),
         staleness=ev[:, 3].astype(np.int64),
         commit_idx=ev[:, 4].astype(np.int64),
-        quorum=int(quorum), discount=float(discount), tau_per_version=taus,
+        quorum=int(quorums[0]) if V else
+        (0 if np.ndim(quorum) else int(quorum)),
+        discount=float(discount), tau_per_version=taus,
         n_clients=M, capacity=cap)
 
 

@@ -17,6 +17,8 @@ Example (CPU):
 from __future__ import annotations
 
 import argparse
+import os
+import signal
 import time
 
 import jax
@@ -95,6 +97,29 @@ def main(argv=None):
                          "on a ('data',) mesh (launch/fleet.py; 0 = off, "
                          "replicated). Requires --async --timeline sparse "
                          "and ring/k_max geometry divisible by N")
+    ap.add_argument("--faults", default="",
+                    help="fault-injection plan (core/faults.py), e.g. "
+                         "'crash=0.1,loss=0.05,dup=0.02,corrupt=0.01,"
+                         "kill=40' — crash-after-fetch / delivery-loss / "
+                         "duplication / corruption rates per dispatch, "
+                         "'key@cohort=rate' per-cohort overrides, "
+                         "'backoff=s' crash re-dispatch base, 'kill=R' "
+                         "SIGKILLs the process after the chunk containing "
+                         "round R (checkpoint-resume exercise). Event "
+                         "rates require --async")
+    ap.add_argument("--quorum-timeout", type=float, default=0.0,
+                    help="graceful degradation: commit with however many "
+                         "contributions arrived once the quorum has "
+                         "waited this long (weights renormalized; 0 = "
+                         "wait forever). Requires --async")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="retransmissions per lost delivery before the "
+                         "contribution is dropped")
+    ap.add_argument("--adaptive-quorum", action="store_true",
+                    help="shrink/grow the commit quorum K from the "
+                         "observed delivery rate (engine.AdaptiveQuorum; "
+                         "--quorum is K0, the cap). Requires --async and "
+                         "a --quorum > 0")
     ap.add_argument("--adaptive-tau", action="store_true",
                     help="re-plan tau at chunk boundaries from the observed "
                          "straggler gap (engine.AdaptiveTau; --tau is the "
@@ -178,6 +203,32 @@ def main(argv=None):
             args.loop = "scan"
         if args.aggregation is None:
             args.aggregation = "dense"
+    fault_plan = None
+    if args.faults:
+        from repro.core.faults import parse_faults
+        try:
+            fault_plan = parse_faults(args.faults)
+        except ValueError as e:
+            ap.error(str(e))
+    if not args.run_async:
+        if fault_plan is not None and fault_plan.any():
+            ap.error("--faults event rates perturb the semi-async event "
+                     "stream; they require --async (kill=R alone works "
+                     "in any mode)")
+        if args.quorum_timeout or args.adaptive_quorum:
+            ap.error("--quorum-timeout/--adaptive-quorum are semi-async "
+                     "degradation knobs; they require --async")
+    if args.quorum_timeout < 0:
+        ap.error(f"--quorum-timeout must be >= 0: got "
+                 f"{args.quorum_timeout}")
+    if args.max_retries < 0:
+        ap.error(f"--max-retries must be >= 0: got {args.max_retries}")
+    if args.adaptive_quorum and args.quorum <= 0:
+        ap.error("--adaptive-quorum plans within [1, K0]; pass a finite "
+                 "initial --quorum > 0")
+    if args.adaptive_quorum and args.adaptive_tau:
+        ap.error("--adaptive-tau and --adaptive-quorum are separate "
+                 "controllers; the engine runs one controller per run")
     if args.loader == "subset" and args.timeline != "sparse":
         ap.error("--loader subset is the sparse O(K) staging path; it "
                  "requires --async --timeline sparse")
@@ -217,7 +268,14 @@ def main(argv=None):
                     quorum=args.quorum,
                     staleness_discount=args.staleness_discount,
                     timeline=args.timeline, k_max=args.k_max,
-                    ring_capacity=args.ring_capacity)
+                    ring_capacity=args.ring_capacity,
+                    faults=fault_plan, quorum_timeout=args.quorum_timeout,
+                    max_retries=args.max_retries)
+    if fault_plan is not None:
+        print(f"faults: {fault_plan.describe()}"
+              + (f"  quorum_timeout={args.quorum_timeout:g}"
+                 if args.quorum_timeout else "")
+              + f"  max_retries={args.max_retries}")
     # resolve the mesh placement BEFORE any device work: geometry errors
     # (ring/k_max not divisible by the 'data' axis, too few devices) are
     # launch-time misconfigurations, not mid-run surprises
@@ -266,11 +324,15 @@ def main(argv=None):
                  "pass --adaptive-tau")
     controller = (engine.AdaptiveTau(tau_max=args.tau_max,
                                      source=args.tau_source)
-                  if args.adaptive_tau else None)
+                  if args.adaptive_tau
+                  else engine.AdaptiveQuorum()
+                  if args.adaptive_quorum else None)
     # the observability layer: sink (engine producers -> controller/log),
-    # tracer (span records over the hot path), metrics (running totals)
+    # tracer (span records over the hot path), metrics (running totals).
+    # AdaptiveQuorum observes fault counters through the sink, so it
+    # forces one on.
     sink = (obs.TelemetrySink()
-            if (args.telemetry or args.log_jsonl
+            if (args.telemetry or args.log_jsonl or args.adaptive_quorum
                 or args.tau_source == "measured") else None)
     tracer = None
     if args.trace_out:
@@ -282,21 +344,25 @@ def main(argv=None):
     # e.g. the GAS activation buffer — rides along in the bundle, and
     # controller decisions/EMA state replay from the metadata)
     ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
-    start_round, state, tau_history = 0, None, None
+    start_round, state = 0, None
+    tau_history, quorum_history = None, None
     if ck is not None:
-        from repro.ckpt import latest_step, read_meta
-        if latest_step(args.ckpt_dir) is not None:
+        from repro.ckpt import latest_good_step, read_meta
+        if latest_good_step(args.ckpt_dir) is not None:
             # replay controller overrides BEFORE restoring: stateful
             # templates (e.g. the async record store's τ axis) are built
-            # from the adapted config
+            # from the adapted config. latest_good_step walks past any
+            # checkpoint that fails its content checksum — a crash mid-
+            # save resumes from the last good chunk boundary.
             sfl = engine.apply_resume_overrides(
                 sfl, read_meta(args.ckpt_dir), controller)
             params, state, meta = engine.restore_run(
                 ck, algo, cfg, sfl, params, loader.round_batch)
             start_round = meta["step"] + 1
             # async controller runs: recompile the timeline prefix with
-            # the per-version τ that actually executed
+            # the per-version τ / quorum that actually executed
             tau_history = meta["metadata"].get("tau_per_version")
+            quorum_history = meta["metadata"].get("quorum_per_version")
             print(f"[resume] from round {start_round} (tau={sfl.tau})")
 
     # the whole system model — per-cohort delays, availability chains,
@@ -338,10 +404,29 @@ def main(argv=None):
                     meas.dispatch_seconds)
                 registry.counter("train.staging_bytes").inc(
                     meas.staging_bytes)
+        if sink is not None:
+            # degradation accounting: mirror the chunk's simulator fault
+            # counters into the metrics registry so /stats surfaces
+            # contribution loss without replaying the telemetry ring
+            for rec in sink.window(info.start, info.stop, "sim"):
+                for f in ("started", "evicted", "crashed", "lost",
+                          "corrupt", "dups", "retries", "timeouts"):
+                    n = getattr(rec, f)
+                    if n:
+                        registry.counter(f"train.faults.{f}").inc(n)
         if runlog is not None:
             runlog.chunk(info.start, info.stop,
                          telemetry=(sink.window(info.start, info.stop)
                                     if sink is not None else ()))
+        if (fault_plan is not None
+                and info.start <= fault_plan.kill_round < info.stop):
+            # the host-kill schedule: SIGKILL (no cleanup, no atexit —
+            # the real failure mode) right after the chunk containing
+            # kill_round flushed and BEFORE its checkpoint lands; resume
+            # restarts from the previous good boundary
+            print(f"[faults] kill={fault_plan.kill_round}: SIGKILL after "
+                  f"chunk [{info.start}, {info.stop})", flush=True)
+            os.kill(os.getpid(), signal.SIGKILL)
 
     if placement is not None and state is None:
         # pre-place the initial ring store so the scan's donated state
@@ -353,14 +438,19 @@ def main(argv=None):
         chunk_size=args.chunk_size, mode=args.loop, checkpointer=ck,
         ckpt_every=args.ckpt_every, chunk_callback=on_chunk,
         controller=controller, tau_history=tau_history,
+        quorum_history=quorum_history,
         batch_subset_fn=(loader.subset_batch
                          if args.loader == "subset" else None),
         batch_put=placement.batch_put if placement is not None else None,
         telemetry=sink)
     if controller is not None and controller.trace:
-        taus = [t for _, t in controller.trace]
-        print(f"adaptive tau ({args.tau_source}): start {args.tau} -> "
-              f"final {taus[-1]} (decisions: {taus})")
+        vals = [t for _, t in controller.trace]
+        if args.adaptive_quorum:
+            print(f"adaptive quorum: K0 {args.quorum} -> final {vals[-1]} "
+                  f"(decisions: {vals})")
+        else:
+            print(f"adaptive tau ({args.tau_source}): start {args.tau} -> "
+                  f"final {vals[-1]} (decisions: {vals})")
     if runlog is not None:
         runlog.close()
         print(f"run log: {args.log_jsonl}")

@@ -58,6 +58,19 @@ class RoundTelemetry(NamedTuple):
     overlap_seconds: float = 0.0     # host prefetch time overlapped with
     #                                  the device scan (sparse streaming)
     t_wall: float = 0.0              # time.time() at emission
+    # fault / degradation counters over the window (core/faults.py): how
+    # many dispatched contributions were lost to each cause, plus ring
+    # evictions (contribution loss under ring pressure), retransmissions,
+    # deduped duplicate deliveries, started dispatches, and commits forced
+    # by the quorum_timeout deadline. All zero on a zero-fault run.
+    started: int = 0                 # dispatches incl. faulted fetches
+    evicted: int = 0                 # ring-store evict-oldest drops
+    crashed: int = 0                 # crash-after-fetch
+    lost: int = 0                    # all delivery attempts lost
+    corrupt: int = 0                 # checksum-dropped payloads
+    dups: int = 0                    # duplicate deliveries (deduped)
+    retries: int = 0                 # retransmissions consumed
+    timeouts: int = 0                # quorum_timeout-forced commits
 
     @property
     def n_rounds(self) -> int:
@@ -76,7 +89,13 @@ class RoundTelemetry(NamedTuple):
                 "staging_bytes": int(self.staging_bytes),
                 "dispatch_seconds": float(self.dispatch_seconds),
                 "overlap_seconds": float(self.overlap_seconds),
-                "t_wall": float(self.t_wall)}
+                "t_wall": float(self.t_wall),
+                "started": int(self.started),
+                "evicted": int(self.evicted),
+                "crashed": int(self.crashed), "lost": int(self.lost),
+                "corrupt": int(self.corrupt), "dups": int(self.dups),
+                "retries": int(self.retries),
+                "timeouts": int(self.timeouts)}
 
 
 def _stamp(rec: RoundTelemetry) -> RoundTelemetry:
@@ -162,5 +181,10 @@ class TelemetrySink:
             if qw:
                 allq = np.concatenate(qw)
                 s["mean_quorum_wait_s"] = float(allq.mean())
+            faults = {f: int(sum(getattr(r, f) for r in rs))
+                      for f in ("started", "evicted", "crashed", "lost",
+                                "corrupt", "dups", "retries", "timeouts")}
+            if any(faults[f] for f in faults if f != "started"):
+                s["faults"] = faults
             out["sources"][src] = s
         return out

@@ -250,6 +250,57 @@ GOLDENS = [
         "    return x.sum()\n"
         "step_jit = jax.jit(step)\n",
     ),
+    (
+        "fault-isolation",
+        # positive: fault-plan rate read inside a @jax.jit body — one
+        # plan's outcomes would be frozen into the cached executable
+        "import jax\n"
+        "@jax.jit\n"
+        "def step(x, sfl):\n"
+        "    return x * (1.0 - sfl.faults.crash)\n",
+        # negative: the engine pattern — faults resolved host-side, the
+        # traced function only sees committed batches
+        "import jax\n"
+        "from repro.core.faults import FaultPlan\n"
+        "@jax.jit\n"
+        "def step(x):\n"
+        "    return x + 1\n"
+        "def run(x, sfl):\n"
+        "    rf = sfl.faults.resolve() if sfl.faults else None\n"
+        "    return step(x), rf\n",
+    ),
+    (
+        "fault-isolation",
+        # positive: fault plan threaded into a lax.scan body by name
+        "from jax import lax\n"
+        "def chunk(xs, fault_plan):\n"
+        "    def body(c, x):\n"
+        "        return c + x * fault_plan.crash, c\n"
+        "    return lax.scan(body, 0.0, xs)\n",
+        # negative: quorum_timeout steers host-side control flow only;
+        # the scanned body stays fault-blind
+        "from jax import lax\n"
+        "def chunk(xs, quorum_timeout):\n"
+        "    def body(c, x):\n"
+        "        return c + x, c\n"
+        "    if quorum_timeout > 0:\n"
+        "        xs = xs[:4]\n"
+        "    return lax.scan(body, 0.0, xs)\n",
+    ),
+    (
+        "fault-isolation",
+        # positive: fault-module constant inside a jit'd lambda (via
+        # module alias)
+        "import jax\n"
+        "from repro.core import faults as cf\n"
+        "f = jax.jit(lambda x: x * cf.OUT_CRASH)\n",
+        # negative: same constant consumed at the dispatch boundary
+        "import jax\n"
+        "from repro.core import faults as cf\n"
+        "f = jax.jit(lambda x: x * 2)\n"
+        "def run(x, fate):\n"
+        "    return f(x) if fate != cf.OUT_CRASH else None\n",
+    ),
 ]
 
 

@@ -1,0 +1,311 @@
+"""Fault-injection subsystem (core/faults.py + the DES fault branches in
+core/events.py): plan grammar and validation, the zero-fault bit-exactness
+contract, per-dispatch conservation accounting, dense == sparse fault
+agreement, quorum-timeout liveness, the degenerate-fleet stall diagnosis,
+and the AdaptiveQuorum degradation controller."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import SFLConfig
+from repro.core import engine, events
+from repro.core import straggler as strag
+from repro.core.faults import (STALE_CORRUPT, STALE_CRASH, STALE_LOST,
+                               FaultPlan, parse_faults, record_checksum)
+from repro.core.population import ClientPopulation, Cohort, DelayModel
+from repro.obs.telemetry import RoundTelemetry
+
+M = 6
+V = 10
+FAULT_COLS = ("started", "crashed", "lost", "corrupt", "dups", "retries",
+              "timeouts")
+
+
+def _sched(seed=0, rounds=12, m=M, **kw):
+    kw.setdefault("straggler_scale", 1.0)
+    kw.setdefault("participation", 0.8)
+    kw.setdefault("t_server", 0.1)
+    kw.setdefault("t_comm", 0.1)
+    return strag.make_schedule(seed, rounds, m, **kw)
+
+
+def _fields_equal(a, b):
+    """Timeline fields that differ between two compiles."""
+    out = []
+    for f in dataclasses.fields(events.Timeline):
+        x, y = getattr(a, f.name), getattr(b, f.name)
+        if (x is None) != (y is None) or \
+                (x is not None and not np.array_equal(x, y)):
+            out.append(f.name)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# plan grammar + validation
+# ---------------------------------------------------------------------------
+
+def test_parse_faults_grammar_roundtrip():
+    p = parse_faults("faults:crash=0.2,loss=0.1,dup=0.05,corrupt=0.01,"
+                     "backoff=0.25,kill=6")
+    assert p == FaultPlan(crash=0.2, loss=0.1, dup=0.05, corrupt=0.01,
+                          backoff=0.25, kill_round=6)
+    # prefix optional, cohort overrides, describe round-trips the spec
+    q = parse_faults("crash=0.05,crash@slow=0.4")
+    assert q.overrides == (("crash", "slow", 0.4),)
+    assert q.describe() == "crash=0.05,crash@slow=0.4"
+    assert parse_faults("").describe() == "none"
+
+
+@pytest.mark.parametrize("spec", [
+    "crash",                    # missing value
+    "jitter=0.5",               # unknown key
+    "backoff@slow=1.0",         # only rate fields take @cohort
+])
+def test_parse_faults_rejects_bad_specs(spec):
+    with pytest.raises(ValueError):
+        parse_faults(spec)
+
+
+def test_fault_plan_validates_rates():
+    with pytest.raises(ValueError):
+        FaultPlan(crash=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan(backoff=-1.0)
+    with pytest.raises(ValueError):
+        FaultPlan(overrides=(("jitter", "slow", 0.1),))
+    # kill alone is a driver-side schedule, not an event perturbation
+    assert not FaultPlan(kill_round=6).any()
+    assert FaultPlan(crash=0.1).any()
+    assert FaultPlan(overrides=(("loss", "slow", 0.2),)).any()
+
+
+def test_resolve_overrides_need_matching_population():
+    plan = FaultPlan(overrides=(("crash", "slow", 1.0),))
+    with pytest.raises(ValueError, match="need a population"):
+        plan.resolve(M)
+    pop = ClientPopulation(cohorts=(
+        Cohort(name="fast", n=4, delay=DelayModel(base=0.3, scale=0.0)),))
+    with pytest.raises(ValueError, match="unknown cohort"):
+        plan.resolve(pop.n_clients, pop)
+
+
+# ---------------------------------------------------------------------------
+# the zero-fault contract: FaultPlan.none() is byte-identical to faults=None
+# ---------------------------------------------------------------------------
+
+def test_zero_fault_plan_is_bit_exact_dense_and_sparse():
+    sched = _sched()
+    kw = dict(quorum=3, discount=0.5, tau=2)
+    clean = events.compile_timeline(sched, V, **kw)
+    inert = events.compile_timeline(sched, V, faults=FaultPlan.none(),
+                                    quorum_timeout=0.0, **kw)
+    assert _fields_equal(clean, inert) == []
+    sparse = events.compile_sparse_timeline(
+        sched, V, faults=FaultPlan.none(), **kw).densify()
+    assert _fields_equal(clean, sparse) == []
+    # and the fault accounting reports an unperturbed run
+    for col in FAULT_COLS[1:]:           # started counts real dispatches
+        assert np.all(getattr(inert, col) == 0), col
+
+
+# ---------------------------------------------------------------------------
+# conservation + dense == sparse under active plans
+# ---------------------------------------------------------------------------
+
+PLANS = [
+    FaultPlan(crash=0.3),
+    FaultPlan(loss=0.4),
+    FaultPlan(corrupt=0.3, dup=0.3),
+    FaultPlan(crash=0.2, loss=0.2, dup=0.2, corrupt=0.2, backoff=0.25),
+]
+
+
+@pytest.mark.parametrize("plan", PLANS, ids=lambda p: p.describe())
+def test_fault_conservation_and_sparse_agreement(plan):
+    """Every dispatch is accounted exactly once: delivered (staleness >=
+    -1), or dropped with a reason code matching the per-version counters.
+    The sparse DES reproduces the dense compiler field-for-field, fault
+    columns included."""
+    sched = _sched()
+    kw = dict(quorum=3, discount=0.5, tau=2, faults=plan,
+              quorum_timeout=1.0)
+    tl = events.compile_timeline(sched, V, **kw)
+    for v in range(V):
+        rows = tl.round_of_origin == v
+        st = tl.staleness[rows]
+        assert tl.started[v] == rows.sum()
+        assert (st == STALE_CRASH).sum() == tl.crashed[v]
+        assert (st == STALE_LOST).sum() == tl.lost[v]
+        assert (st == STALE_CORRUPT).sum() == tl.corrupt[v]
+        delivered = (st >= -1).sum()
+        assert delivered == tl.started[v] - tl.crashed[v] - tl.lost[v] \
+            - tl.corrupt[v]
+        assert delivered == tl.start_mask[v].sum()
+    # dropped rows never commit and carry no weight
+    dropped = tl.staleness < -1
+    assert np.all(tl.commit_idx[dropped] == -1)
+    # weights stay normalized per commit despite the drops
+    sums = tl.apply_w.sum(axis=1)
+    applied = tl.applied > 0
+    assert np.allclose(sums[applied], 1.0, atol=1e-6)
+    assert np.all(sums[~applied] == 0.0)
+
+    got = events.compile_sparse_timeline(sched, V, **kw).densify()
+    assert _fields_equal(tl, got) == []
+
+
+def test_duplicates_are_counted_not_applied():
+    """dup faults are deduped structurally (one in-flight record per
+    client): dup=1.0 must change the `dups` counter and NOTHING else."""
+    sched = _sched()
+    kw = dict(quorum=3, discount=0.5, tau=2, quorum_timeout=1.0)
+    base = FaultPlan(crash=0.3, loss=0.2, corrupt=0.15)
+    a = events.compile_timeline(
+        sched, V, faults=dataclasses.replace(base, dup=1.0), **kw)
+    b = events.compile_timeline(
+        sched, V, faults=dataclasses.replace(base, dup=0.0), **kw)
+    assert _fields_equal(a, b) == ["dups"]
+    assert a.dups.sum() > 0 and b.dups.sum() == 0
+
+
+def test_loss_retries_and_retransmission_latency():
+    """Lost attempts consume retries; a delivery that needed resends
+    arrives strictly later than its loss-free counterpart (one uplink
+    t_comm per attempt). Only version 0 is comparable across the two
+    runs — both dispatch its wave at t=0 with identical delays; later
+    broadcasts drift apart once losses reshape the commit schedule."""
+    sched = _sched()
+    kw = dict(quorum=3, discount=0.5, tau=2, quorum_timeout=2.0)
+    lossy = events.compile_timeline(sched, V, faults=FaultPlan(loss=0.5),
+                                    max_retries=3, **kw)
+    clean = events.compile_timeline(sched, V,
+                                    **dict(kw, quorum_timeout=0.0))
+    assert lossy.retries.sum() > 0
+    assert lossy.lost.sum() > 0          # some exhaust all 4 attempts
+    clean_at = {int(c): t for v, c, t in
+                zip(clean.round_of_origin, clean.client_id,
+                    clean.arrival_time) if v == 0}
+    grew = 0
+    for v, c, t, st in zip(lossy.round_of_origin, lossy.client_id,
+                           lossy.arrival_time, lossy.staleness):
+        if v != 0 or st < -1:
+            continue
+        assert t >= clean_at[int(c)] - 1e-12
+        grew += t > clean_at[int(c)] + 1e-12
+    assert grew > 0
+
+
+def test_cohort_override_targets_only_named_cohort():
+    pop = ClientPopulation(cohorts=(
+        Cohort(name="fast", n=4, delay=DelayModel(base=0.3, scale=0.0)),
+        Cohort(name="slow", n=2, delay=DelayModel(base=2.0, scale=0.0)),
+    ))
+    sched = strag.make_schedule(0, 12, population=pop, t_server=0.1,
+                                t_comm=0.05)
+    tl = events.compile_timeline(
+        sched, V, quorum=2, discount=0.5, tau=2, quorum_timeout=1.0,
+        faults=FaultPlan(overrides=(("crash", "slow", 1.0),)))
+    crash_rows = tl.staleness == STALE_CRASH
+    assert crash_rows.any()
+    assert np.all(tl.client_id[crash_rows] >= 4)      # slow slice only
+    # every slow dispatch crashed: no slow client ever delivers
+    assert np.all(tl.client_id[tl.staleness >= -1] < 4)
+
+
+# ---------------------------------------------------------------------------
+# liveness: quorum timeouts commit with what arrived; stalls are diagnosed
+# ---------------------------------------------------------------------------
+
+def test_quorum_timeout_commits_and_counts():
+    sched = _sched()
+    tl = events.compile_timeline(sched, V, quorum=5, discount=0.5, tau=2,
+                                 faults=FaultPlan(crash=0.5),
+                                 quorum_timeout=0.5)
+    assert tl.commit_times.shape == (V,)
+    assert np.all(np.isfinite(tl.commit_times))
+    assert np.all(np.diff(tl.commit_times) >= 0)
+    assert tl.timeouts.sum() > 0
+
+
+def test_degenerate_fleet_stall_is_diagnosed_not_a_deadlock():
+    """The regression the quorum_timeout knob exists for: a fleet whose
+    every dispatch crashes can never fill any quorum. Without a timeout
+    that must be a QuorumStallError naming the fix — not an infinite
+    event loop, not a silent under-filled commit."""
+    sched = _sched(m=3, rounds=8)
+    kw = dict(quorum=2, discount=0.5, tau=2, faults=FaultPlan(crash=1.0))
+    with pytest.raises(events.QuorumStallError, match="quorum_timeout"):
+        events.compile_timeline(sched, 6, **kw)
+    with pytest.raises(events.QuorumStallError, match="quorum_timeout"):
+        events.compile_sparse_timeline(sched, 6, **kw)
+    # the prescribed fix unsticks both backends
+    tl = events.compile_timeline(sched, 6, quorum_timeout=0.5, **kw)
+    assert np.all(np.isfinite(tl.commit_times))
+    assert tl.started.sum() == tl.crashed.sum()       # nobody ever lands
+    got = events.compile_sparse_timeline(sched, 6, quorum_timeout=0.5,
+                                         **kw).densify()
+    assert _fields_equal(tl, got) == []
+
+
+def test_zero_fault_run_never_stalls_without_timeout():
+    """quorum > arrivals on a clean run is the pre-existing wait-for-all
+    semantics (quorum clamps to pending) — the stall guard must not fire
+    when no fault plan is active."""
+    sched = _sched(m=3, rounds=8)
+    tl = events.compile_timeline(sched, 6, quorum=3, discount=0.5, tau=2)
+    assert np.all(np.isfinite(tl.commit_times))
+
+
+# ---------------------------------------------------------------------------
+# the AdaptiveQuorum degradation controller
+# ---------------------------------------------------------------------------
+
+def _window(started, dropped):
+    rec = RoundTelemetry(0, 4, "sim", "async", np.full(4, 0.1),
+                         started=started, crashed=dropped)
+    return engine.SchedWindow(0, 4, np.zeros((4, M)), np.ones((4, M)),
+                              0.1, 0.0, telemetry=(rec,))
+
+
+def test_adaptive_quorum_tracks_delivery_rate():
+    ctl = engine.AdaptiveQuorum(ema=1.0)        # no smoothing: exact rate
+    ctl.bind(SFLConfig(n_clients=M, tau=2, cut_units=1, quorum=4))
+    assert ctl.update(4, _window(20, 10), {}) == {"quorum": 2}
+    assert ctl.update(8, _window(20, 0), {}) == {"quorum": 4}   # recovers
+    assert ctl.update(12, _window(20, 20), {}) == {"quorum": 1}  # k_min
+    assert ctl.trace == [(4, 2), (8, 4), (12, 1)]
+    # round-trips through its state_dict (checkpoint resume)
+    fresh = engine.AdaptiveQuorum(ema=1.0)
+    fresh.load_state_dict(ctl.state_dict())
+    assert fresh.k0 == 4 and fresh.rate == ctl.rate
+
+
+def test_adaptive_quorum_ignores_windows_without_accounting():
+    ctl = engine.AdaptiveQuorum()
+    ctl.bind(SFLConfig(n_clients=M, tau=2, cut_units=1, quorum=4))
+    assert ctl.update(4, None, {}) == {}
+    assert ctl.update(4, _window(0, 0), {}) == {}     # no sink attached
+
+
+def test_adaptive_quorum_validates_binding():
+    with pytest.raises(ValueError, match="k_min"):
+        engine.AdaptiveQuorum(k_min=0)
+    ctl = engine.AdaptiveQuorum()
+    with pytest.raises(ValueError, match="quorum > 0"):
+        ctl.bind(SFLConfig(n_clients=M, tau=2, cut_units=1,
+                                  quorum=0))
+
+
+# ---------------------------------------------------------------------------
+# the wire-format integrity primitive
+# ---------------------------------------------------------------------------
+
+def test_record_checksum_detects_bit_flips():
+    keys = np.arange(8, dtype=np.uint32)
+    coeffs = np.linspace(0.0, 1.0, 8, dtype=np.float32)
+    crc = record_checksum(keys, coeffs)
+    assert crc == record_checksum(keys.copy(), coeffs.copy())
+    flipped = coeffs.copy()
+    flipped[3] = np.nextafter(flipped[3], 2.0, dtype=np.float32)
+    assert crc != record_checksum(keys, flipped)

@@ -1,5 +1,9 @@
 """End-to-end system behaviour: the training driver round-trips through
-checkpoint restart, and the serve driver generates coherent shapes."""
+checkpoint restart (including SIGKILL mid-run), and the serve driver
+generates coherent shapes."""
+import json
+import os
+import signal
 import subprocess
 import sys
 import tempfile
@@ -21,6 +25,60 @@ def test_train_driver_checkpoint_restart():
                             text=True, timeout=560, cwd="/root/repo", env=env)
         assert "[resume] from round" in r2.stdout, r2.stdout + r2.stderr[-2000:]
         assert "round    4" in r2.stdout
+
+
+@pytest.mark.slow
+def test_train_driver_sigkill_and_resume_bit_identical():
+    """The host-kill fault (--faults kill=R) SIGKILLs the driver — no
+    cleanup, no atexit, the real crash mode — right after the chunk
+    containing round R flushes and BEFORE that chunk's checkpoint lands.
+    A rerun without the kill flag must resume from the last good chunk
+    boundary and produce a per-round loss log bit-identical to an
+    uninterrupted run."""
+    with tempfile.TemporaryDirectory() as d:
+        env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+
+        def cmd(tag, *extra):
+            return [sys.executable, "-m", "repro.launch.train", "--arch",
+                    "olmo-1b", "--smoke", "--clients", "2", "--batch", "1",
+                    "--seq", "16", "--rounds", "8", "--chunk-size", "2",
+                    "--ckpt-every", "2", "--ckpt-dir", f"{d}/{tag}_ckpt",
+                    "--log-jsonl", f"{d}/{tag}.jsonl", *extra]
+
+        ref = subprocess.run(cmd("ref"), capture_output=True, text=True,
+                             timeout=560, cwd="/root/repo", env=env)
+        assert "round    7" in ref.stdout, ref.stdout + ref.stderr[-2000:]
+
+        killed = subprocess.run(cmd("kill", "--faults", "kill=5"),
+                                capture_output=True, text=True, timeout=560,
+                                cwd="/root/repo", env=env)
+        assert killed.returncode == -signal.SIGKILL, \
+            killed.stdout + killed.stderr[-2000:]
+        assert "[faults] kill=5: SIGKILL after chunk [4, 6)" in killed.stdout
+        # the killed chunk's rounds flushed but its checkpoint never
+        # landed: the newest surviving step is the previous boundary
+        steps = sorted(s for s in os.listdir(f"{d}/kill_ckpt")
+                       if s.startswith("step_"))
+        assert steps[-1] == "step_0000000003", steps
+
+        resumed = subprocess.run(cmd("kill"), capture_output=True,
+                                 text=True, timeout=560, cwd="/root/repo",
+                                 env=env)
+        assert "[resume] from round 4" in resumed.stdout, \
+            resumed.stdout + resumed.stderr[-2000:]
+        assert "round    7" in resumed.stdout
+
+        def losses(path):
+            with open(path) as fh:
+                rows = [json.loads(line) for line in fh]
+            return {r["round"]: r["loss"] for r in rows
+                    if r.get("kind") == "round"}
+
+        # RunLog truncated the killed run's replayed rows on resume, so
+        # the stitched log must equal the uninterrupted one bit for bit
+        ref_losses = losses(f"{d}/ref.jsonl")
+        assert len(ref_losses) == 8
+        assert losses(f"{d}/kill.jsonl") == ref_losses
 
 
 def test_train_driver_validates_async_policy_flags():

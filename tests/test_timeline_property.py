@@ -201,3 +201,78 @@ def test_bounded_ring_conserves_contributions(p, k_max, cap_mult):
     w = rows.apply_w
     assert np.all(w[rows.apply_client < 0] == 0.0)
     assert np.all(rows.start_slot[rows.start_client < 0] == capacity)
+
+
+# ---------------------------------------------------------------------------
+# fault-plan invariants (core/faults.py): conservation and liveness hold
+# for ARBITRARY plans, not just the benchmark's curated rates
+# ---------------------------------------------------------------------------
+
+from repro.core.faults import (STALE_CORRUPT, STALE_CRASH,   # noqa: E402
+                               STALE_LOST, FaultPlan)
+
+FAULT_PLAN = st.builds(
+    FaultPlan,
+    crash=st.floats(0.0, 0.8, allow_nan=False),
+    loss=st.floats(0.0, 0.8, allow_nan=False),
+    dup=st.floats(0.0, 1.0, allow_nan=False),
+    corrupt=st.floats(0.0, 0.8, allow_nan=False),
+    backoff=st.floats(0.05, 1.0, allow_nan=False),
+)
+
+FAULT_FLEET = st.fixed_dictionaries(dict(
+    seed=st.integers(0, 2**31 - 1),
+    M=st.integers(2, 10),
+    V=st.integers(0, 16),
+    quorum=st.integers(1, 10),
+    timeout=st.floats(0.2, 2.0, allow_nan=False),
+    discount=DYADIC,
+    scale=st.floats(0.0, 3.0, allow_nan=False),
+    part=st.floats(0.3, 1.0, allow_nan=False),
+    t_server=st.floats(0.01, 1.0, allow_nan=False),
+    plan=FAULT_PLAN,
+))
+
+
+@settings(**SET)
+@given(p=FAULT_FLEET)
+def test_fault_conservation_and_liveness_under_random_plans(p):
+    """For any FaultPlan with a quorum_timeout escape: every dispatch is
+    accounted exactly once (delivered, or dropped with a reason code whose
+    per-version counters balance), commit times stay finite and
+    non-decreasing (liveness), and the sparse DES agrees with the dense
+    compiler field-for-field, fault columns included."""
+    tl = events.compile_timeline(_sched(p), p["V"],
+                                 quorum=min(p["quorum"], p["M"]),
+                                 discount=p["discount"], tau=2,
+                                 faults=p["plan"],
+                                 quorum_timeout=p["timeout"])
+    for v in range(p["V"]):
+        rows = tl.round_of_origin == v
+        st_ = tl.staleness[rows]
+        assert tl.started[v] == rows.sum()
+        assert (st_ == STALE_CRASH).sum() == tl.crashed[v]
+        assert (st_ == STALE_LOST).sum() == tl.lost[v]
+        assert (st_ == STALE_CORRUPT).sum() == tl.corrupt[v]
+        assert (st_ >= -1).sum() == tl.started[v] - tl.crashed[v] \
+            - tl.lost[v] - tl.corrupt[v]
+    dropped = tl.staleness < -1
+    assert np.all(tl.commit_idx[dropped] == -1)
+    assert np.all(np.isfinite(tl.commit_times))
+    assert np.all(np.diff(tl.commit_times) >= 0)
+    assert np.all(tl.durations >= 0)
+    sums = tl.apply_w.sum(axis=1)
+    applied = tl.applied > 0
+    assert np.allclose(sums[applied], 1.0, atol=1e-6)
+    assert np.all(sums[~applied] == 0.0)
+
+    got = events.compile_sparse_timeline(
+        _sched(p), p["V"], quorum=min(p["quorum"], p["M"]),
+        discount=p["discount"], tau=2, faults=p["plan"],
+        quorum_timeout=p["timeout"]).densify()
+    import dataclasses
+    for f in dataclasses.fields(events.Timeline):
+        x, y = getattr(tl, f.name), getattr(got, f.name)
+        assert (x is None) == (y is None), f.name
+        if x is not None:
+            assert np.array_equal(x, y), f.name
